@@ -1,0 +1,81 @@
+"""Shared benchmark scaffolding: one trained OPT-family model (cached on
+disk), calibration + held-out evaluation sets, ppl helpers, CSV output.
+
+Scale note (DESIGN.md §7): the paper evaluates OPT-1.3B..13B on WikiText-2;
+this CPU container trains an OPT-architecture model (ReLU/LayerNorm/learned
+positions — where the paper's scaling invariance is exact) on a deterministic
+synthetic corpus. Every table reproduces the paper's QUALITATIVE claims; the
+full-size configs are exercised structurally by the dry-run.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.objective import calib_ce
+from repro.data.calib import calibration_tokens
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.models import forward
+
+CKPT = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench_model"
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "benchmarks"
+
+BENCH_CFG = get_config("opt-tiny").reduced(
+    n_layers=4, d_model=96, d_ff=256, vocab_size=384, n_heads=4, n_kv_heads=4,
+    max_seq_len=256)
+
+
+def bench_model(steps: int = 400):
+    """Train (or load) the shared benchmark model."""
+    from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+    cfg = BENCH_CFG
+    if latest_step(CKPT) is not None:
+        params, _ = restore_checkpoint(CKPT)
+        return params, cfg
+    from repro.launch.train import train
+    params, losses, _ = train(steps=steps, batch=16, seq=128, lr=1.5e-3,
+                              cfg=cfg, log_every=100)
+    save_checkpoint(CKPT, steps, params)
+    return params, cfg
+
+
+def calib_set(cfg, n_seqs=32, seq_len=128):
+    """Paper §4.1: 32 sequences (512 tokens there; 128 here — same ratio of
+    calib tokens to model capacity)."""
+    return jnp.asarray(calibration_tokens(cfg.vocab_size, n_seqs=n_seqs,
+                                          seq_len=seq_len))
+
+
+def heldout_set(cfg, n_seqs=16, seq_len=128, seed=4242):
+    batch_at = make_pipeline(DataConfig(seq_len=seq_len, global_batch=n_seqs,
+                                        seed=seed, vocab_size=cfg.vocab_size))
+    return jnp.asarray(batch_at(0))
+
+
+def ppl(params, cfg, tokens) -> float:
+    """Held-out perplexity (the paper's WikiText-2/C4 metric)."""
+    return float(jnp.exp(calib_ce(forward(params, cfg, tokens), tokens,
+                                  cfg.vocab_size)))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """Assignment-required CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeat=1):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args)
+    dt = (time.time() - t0) / repeat
+    return out, dt * 1e6

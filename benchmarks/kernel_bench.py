@@ -1,0 +1,42 @@
+"""Kernel microbenchmarks: quant_matmul / group_quant vs their jnp references.
+
+On this CPU container the Pallas kernels run in interpret mode (slow by
+construction); the numbers that matter here are the REFERENCE-path timings
+and the analytic HBM-traffic derivation for the TPU target printed as
+``derived`` (weight-bytes ratio = the roofline win of the fused kernel).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core.quant import QuantConfig, quantize_tensor
+from repro.kernels.ref import quant_matmul_ref, group_quant_ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for (M, K, N, bits, G) in [(8, 2048, 2048, 2, 128), (8, 2048, 2048, 4, 128),
+                               (128, 1024, 1024, 2, 64)]:
+        w = jax.random.normal(key, (K, N))
+        x = jax.random.normal(key, (M, K))
+        qt = quantize_tensor(w, QuantConfig(bits=bits, group_size=G))
+        f = jax.jit(lambda x, p, s, z: quant_matmul_ref(x, p, s, z, bits, G))
+        f(x, qt.packed, qt.scale, qt.zero)[0].block_until_ready()  # warm
+        _, us = timed(lambda: jax.block_until_ready(
+            f(x, qt.packed, qt.scale, qt.zero)), repeat=5)
+        dense_bytes = K * N * 2
+        packed_bytes = qt.memory_bytes()
+        emit(f"kernel/quant_matmul/{M}x{K}x{N}b{bits}", us,
+             f"weight_hbm_ratio={dense_bytes/packed_bytes:.2f}x")
+
+    for (K, N, bits, G) in [(2048, 2048, 2, 128), (4096, 1024, 4, 64)]:
+        w = jax.random.normal(key, (K, N))
+        f = jax.jit(lambda w: group_quant_ref(w, bits, G))
+        jax.block_until_ready(f(w))
+        _, us = timed(lambda: jax.block_until_ready(f(w)), repeat=5)
+        # fused kernel: 1 read + 1 write vs 4 passes un-fused
+        emit(f"kernel/group_quant/{K}x{N}b{bits}", us, "fused_hbm_passes=2_of_8")
+
+
+if __name__ == "__main__":
+    run()

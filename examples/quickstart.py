@@ -1,0 +1,43 @@
+"""Quickstart: quantize a model to 2 bits with InvarExplore in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import QuantConfig
+from repro.core.pipeline import quantize_model
+from repro.core.search import SearchConfig
+from repro.core.objective import calib_ce
+from repro.data.calib import calibration_tokens
+from repro.models import init_params, forward
+
+# 1. a model (here: random-init tiny OPT; swap in your own params pytree)
+cfg = get_config("opt-tiny").reduced(n_layers=2, d_model=64, d_ff=128,
+                                     vocab_size=256, n_heads=4, n_kv_heads=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+# 2. a small calibration set (paper: 32 x 512 tokens from the Pile)
+calib = jnp.asarray(calibration_tokens(cfg.vocab_size, n_seqs=4, seq_len=128))
+
+# 3. ultra-low-bit PTQ: AWQ base + InvarExplore discrete search on top
+qcfg = QuantConfig(bits=2, group_size=32)
+result = quantize_model(
+    params, cfg, qcfg,
+    method="awq",                                   # rtn | gptq | awq | omniquant
+    calib_tokens=calib,
+    search=SearchConfig(steps=150, n_match_layers=2, log_every=50),
+)
+
+ce_fp = float(calib_ce(forward(params, cfg, calib), calib, cfg.vocab_size))
+ce_q = float(calib_ce(forward(result.params_q, cfg, calib), calib, cfg.vocab_size))
+print(f"\nmethod={result.method}")
+print(f"calib CE: fp32={ce_fp:.4f}  2-bit={ce_q:.4f}")
+print(f"search: {result.search.initial_loss:.4f} -> {result.search.final_loss:.4f} "
+      f"(accept rate {result.search.accept_rate:.1%})")

@@ -1,0 +1,58 @@
+"""End-to-end serving driver (the paper's deployment scenario): pack a model
+to 2-bit QTensors and serve BATCHED requests through prefill + greedy decode,
+reporting the memory saving and tokens/s.
+
+    PYTHONPATH=src python examples/serve_quantized.py --requests 8
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.launch.serve import BatchedServer, Request
+from repro.models import init_params
+from repro.quantized.qmodel import pack_model, packed_bytes, dense_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-tiny")
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--group", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(n_layers=4, d_model=128, d_ff=512,
+                                        vocab_size=512, n_heads=4, n_kv_heads=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = QuantConfig(bits=args.bits, group_size=args.group)
+    params_q = pack_model(params, qcfg)
+    pb, db = packed_bytes(params_q), dense_bytes(params_q)
+    print(f"[serve] weights: packed={pb/1e6:.2f} MB vs fp16-dense={db/1e6:.2f} MB "
+          f"on quantized leaves ({db/pb:.1f}x)")
+
+    server = BatchedServer(params_q, cfg, batch_size=args.batch, max_len=128)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 16))).astype(np.int32),
+                    max_new=args.max_new) for _ in range(args.requests)]
+    t0 = time.time()
+    outs = server.generate(reqs)
+    dt = time.time() - t0
+    n = sum(len(o) for o in outs)
+    print(f"[serve] {len(reqs)} requests -> {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    for i, o in enumerate(outs[:3]):
+        print(f"  req{i}: prompt_len={len(reqs[i].prompt)} -> {o[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""InternVL2-1B [VLM] — Qwen2-0.5B language backbone + InternViT frontend STUB.
+
+Source: arXiv:2404.16821 + hf:OpenGVLab/InternVL2-1B. The vision tower is a
+stub per assignment spec (input_specs provides precomputed patch embeddings).
+Qwen2 backbone uses attention qkv biases.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    activation="silu",
+    gated_mlp=True,
+    attn_qkv_bias=True,
+    pos_emb="rope",
+    rope_theta=1e6,
+    norm="rmsnorm",
+    block_pattern="dense",
+    frontend="vision",
+    frontend_len=256,
+    tie_embeddings=True,
+    max_seq_len=32768,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

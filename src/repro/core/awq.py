@@ -1,0 +1,154 @@
+"""AWQ baseline (Lin et al. 2024b) in JAX: activation-aware scaling + clipping.
+
+Scaling — the paper's framing: AWQ's per-channel scaling is the SPECIAL CASE
+of InvarExplore's S transform on the FFN hidden axis, with s chosen by a grid
+search over ``s = act_mag^α`` (α ∈ [0, 1], 20 points) minimizing the quantized
+block-output MSE. (Exact invariance for ReLU; AWQ applies it regardless.)
+
+Clipping — per-group max/min shrink grid-searched to minimize per-matrix
+output MSE (AWQ's second component; also used by OmniQuant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, compute_qparams, fake_quant, _grouped
+from repro.core.taps import capture_dense_taps
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+__all__ = ["awq_scale_ffn", "clip_search", "awq_process_dense"]
+
+
+def _fq(w, qcfg):
+    return fake_quant(w, qcfg)
+
+
+def awq_scale_ffn(w_up, w_down, b_up, w_gate, x_mlp, qcfg: QuantConfig,
+                  cfg: ModelConfig, n_grid: int = 20):
+    """Grid-search the hidden-axis scaling vector for one FFN.
+
+    x_mlp: (n, D) inputs of the up projection. Returns scaled
+    (w_up, w_down, b_up, w_gate) and the chosen s (F,).
+    """
+    act = L.activation_fn(cfg.activation)
+
+    def ffn(wu, wd, bu, wg, x):
+        up = x @ wu
+        if bu is not None:
+            up = up + bu
+        if wg is not None:
+            h = act(x @ wg) * up
+        else:
+            h = act(up)
+        return h @ wd
+
+    y_fp = ffn(w_up, w_down, b_up, w_gate, x_mlp)
+    # activation magnitude per hidden channel (input of down projection)
+    up = x_mlp @ w_up + (b_up if b_up is not None else 0.0)
+    mid = act(x_mlp @ w_gate) * up if w_gate is not None else act(up)
+    act_mag = jnp.mean(jnp.abs(mid), axis=0) + 1e-8          # (F,)
+
+    def try_alpha(alpha):
+        s = jnp.power(act_mag, alpha)
+        s = s / jnp.sqrt(jnp.max(s) * jnp.min(s) + 1e-12)
+        s = jnp.clip(s, 1e-4, 1e4)
+        wu = _fq(w_up * s[None, :], qcfg)
+        wd = _fq(w_down / s[:, None], qcfg)
+        bu = b_up * s if b_up is not None else None
+        wg = _fq(w_gate, qcfg) if w_gate is not None else None
+        y = ffn(wu, wd, bu, wg, x_mlp)
+        return jnp.mean(jnp.square(y - y_fp)), s
+
+    alphas = jnp.linspace(0.0, 1.0, n_grid)
+    losses, scales = jax.lax.map(try_alpha, alphas)
+    best = jnp.argmin(losses)
+    s = scales[best]
+    out_up = w_up * s[None, :]
+    out_down = w_down / s[:, None]
+    out_b = b_up * s if b_up is not None else None
+    return out_up, out_down, out_b, w_gate, s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "n_grid"))
+def clip_search(w, x, bits: int, group_size: int, n_grid: int = 10):
+    """Per-group clip-ratio grid search minimizing ||x@w - x@fq(clip(w))||².
+
+    Returns the clipped (still continuous-domain) weights.
+    """
+    qcfg = QuantConfig(bits=bits, group_size=group_size)
+    y_fp = x @ w
+
+    def try_ratio(r):
+        g = qcfg.resolve_group(w.shape[0])
+        wg = _grouped(w, g)
+        wmax = jnp.max(wg, axis=1, keepdims=True) * r
+        wmin = jnp.min(wg, axis=1, keepdims=True) * r
+        wc = jnp.clip(wg, wmin, wmax).reshape(w.shape)
+        y = x @ fake_quant(wc, qcfg)
+        return jnp.mean(jnp.square(y - y_fp)), wc
+
+    ratios = jnp.linspace(0.5, 1.0, n_grid)
+    losses, cands = jax.lax.map(try_ratio, ratios)
+    return cands[jnp.argmin(losses)]
+
+
+def awq_process_dense(params, cfg: ModelConfig, calib_tokens, qcfg: QuantConfig,
+                      do_clip: bool = True):
+    """AWQ over a dense decoder: hidden-axis scaling per FFN + weight clipping
+    on every quantizable linear. Returns continuous-domain processed params."""
+    taps = capture_dense_taps(params, cfg, calib_tokens)
+    x_mlp = taps["mlp_in"].reshape(taps["mlp_in"].shape[0], -1, cfg.d_model)
+    x_attn = taps["attn_in"].reshape(taps["attn_in"].shape[0], -1, cfg.d_model)
+    x_wo = taps["attn_mid"].reshape(taps["attn_mid"].shape[0], -1,
+                                    taps["attn_mid"].shape[-1])
+
+    blocks = dict(params["blocks"])
+    mlp = dict(blocks["mlp"])
+    has_bias = "b_up" in mlp
+    has_gate = "gate" in mlp
+    wu, wd, bu, wg = _scale_dispatch(mlp, x_mlp, qcfg, cfg)
+    mlp["up"], mlp["down"] = wu, wd
+    if has_bias:
+        mlp["b_up"] = bu
+    if has_gate:
+        mlp["gate"] = wg
+
+    if do_clip:
+        clip = lambda w, x: jax.vmap(
+            lambda wi, xi: clip_search(wi, xi, qcfg.bits, qcfg.group_size))(w, x)
+        x_mid = taps["mlp_mid"].reshape(taps["mlp_mid"].shape[0], -1, cfg.d_ff)
+        mlp["up"] = clip(mlp["up"], x_mlp)
+        if has_gate:
+            mlp["gate"] = clip(mlp["gate"], x_mlp)
+        mlp["down"] = clip(mlp["down"], x_mid)
+        attn = dict(blocks["attn"])
+        for k, x in (("wq", x_attn), ("wk", x_attn), ("wv", x_attn), ("wo", x_wo)):
+            attn[k] = clip(attn[k], x)
+        blocks["attn"] = attn
+    blocks["mlp"] = mlp
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+def _scale_dispatch(mlp, x_mlp, qcfg, cfg):
+    """vmap wrapper handling optional bias/gate without tracing Nones."""
+    has_bias = "b_up" in mlp
+    has_gate = "gate" in mlp
+
+    def one(u, d, b, g, x):
+        bu = b if has_bias else None
+        wg = g if has_gate else None
+        ou, od, ob, og, _ = awq_scale_ffn(u, d, bu, wg, x, qcfg, cfg)
+        return (ou, od,
+                ob if ob is not None else jnp.zeros(u.shape[1], u.dtype),
+                og if og is not None else jnp.zeros_like(u))
+
+    L_ = mlp["up"].shape[0]
+    dummy_b = mlp.get("b_up", jnp.zeros((L_, mlp["up"].shape[2]), mlp["up"].dtype))
+    dummy_g = mlp.get("gate", jnp.zeros_like(mlp["up"]))
+    return jax.vmap(one)(mlp["up"], mlp["down"], dummy_b, dummy_g, x_mlp)

@@ -1,0 +1,114 @@
+"""GPTQ baseline (Frantar et al. 2023) in JAX.
+
+Per linear weight W (K, N) used as ``x @ W`` with calibration inputs
+X (n, K): sequentially quantize input-dim rows; after quantizing row k, the
+remaining rows absorb the rounding error weighted by the inverse-Hessian:
+
+    H      = 2 XᵀX + λI            (λ = damp · mean(diag H))
+    U      = cholesky(H⁻¹)ᵀ        (upper factor, as in the reference code)
+    err_k  = (W[k] - dq(W[k])) / U[k, k]
+    W[j]  -= U[k, j] · err_k        for j > k
+
+Group scale/zero are (re)computed from the *updated* weights at each group
+boundary. The whole inner loop is a ``lax.fori_loop``; layers are vmapped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.core.taps import capture_dense_taps
+from repro.models.config import ModelConfig
+
+__all__ = ["gptq_matrix", "gptq_process_dense"]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "damp"))
+def gptq_matrix(w, x, bits: int, group_size: int, damp: float = 0.01):
+    """w: (K, N); x: (n, K) calibration inputs. Returns dequantized-domain
+    GPTQ-compensated weights (K, N)."""
+    K, N = w.shape
+    G = group_size if group_size != -1 else K
+    q_max = (1 << bits) - 1
+
+    xf = x.astype(jnp.float32)
+    H = 2.0 * (xf.T @ xf)
+    diag_mean = jnp.mean(jnp.diag(H))
+    H = H + (damp * diag_mean + 1e-6) * jnp.eye(K)
+    Hinv = jax.scipy.linalg.cho_solve((jnp.linalg.cholesky(H), True), jnp.eye(K))
+    # symmetrize for numerical safety before the second factorization
+    Hinv = 0.5 * (Hinv + Hinv.T) + 1e-8 * jnp.eye(K)
+    U = jnp.linalg.cholesky(Hinv).T                       # upper: Hinv = UᵀU
+
+    w0 = w.astype(jnp.float32)
+
+    def qparams(rows):
+        wmax = jnp.max(rows, axis=0)
+        wmin = jnp.min(rows, axis=0)
+        scale = jnp.maximum((wmax - wmin) / q_max, 1e-8)
+        zero = jnp.clip(jnp.round(-wmin / scale), 0, q_max)
+        return scale, zero
+
+    def body(k, carry):
+        W, dq, scale, zero = carry
+        # refresh group qparams at boundaries from the CURRENT weights
+        def refresh(_):
+            g0 = (k // G) * G
+            rows = jax.lax.dynamic_slice(W, (g0, 0), (G, N))
+            return qparams(rows)
+        scale, zero = jax.lax.cond(k % G == 0, refresh, lambda _: (scale, zero), None)
+        wk = W[k]
+        q = jnp.clip(jnp.round(wk / scale) + zero, 0, q_max)
+        dqk = scale * (q - zero)
+        err = (wk - dqk) / U[k, k]
+        # update remaining rows j > k
+        ucol = jnp.where(jnp.arange(K) > k, U[k], 0.0)    # (K,)
+        W = W - ucol[:, None] * err[None, :]
+        dq = dq.at[k].set(dqk)
+        return W, dq, scale, zero
+
+    s0, z0 = qparams(jax.lax.dynamic_slice(w0, (0, 0), (G, N)))
+    _, dq, _, _ = jax.lax.fori_loop(0, K, body, (w0, jnp.zeros_like(w0), s0, z0))
+    return dq.astype(w.dtype)
+
+
+def gptq_process_dense(params, cfg: ModelConfig, calib_tokens, qcfg: QuantConfig,
+                       damp: float = 0.01):
+    """Run GPTQ over every quantizable linear of a dense decoder.
+
+    Returns params with all attn/mlp weights replaced by GPTQ-compensated
+    dequantized-domain weights. (They lie on the quantization grid, so a
+    subsequent ``fake_quant`` with the same config is ~idempotent; the search
+    re-quantizes transformed versions of them.)
+    """
+    taps = capture_dense_taps(params, cfg, calib_tokens)
+
+    def flat(t):  # (L,B,S,D) -> (L, B*S, D)
+        return t.reshape(t.shape[0], -1, t.shape[-1])
+
+    x_attn = flat(taps["attn_in"])
+    x_wo = flat(taps["attn_mid"])
+    x_mlp = flat(taps["mlp_in"])
+    x_down = flat(taps["mlp_mid"])
+
+    run = jax.vmap(lambda w, x: gptq_matrix(w, x, qcfg.bits, qcfg.group_size, damp))
+
+    blocks = dict(params["blocks"])
+    attn = dict(blocks["attn"])
+    attn["wq"] = run(attn["wq"], x_attn)
+    attn["wk"] = run(attn["wk"], x_attn)
+    attn["wv"] = run(attn["wv"], x_attn)
+    attn["wo"] = run(attn["wo"], x_wo)
+    blocks["attn"] = attn
+    mlp = dict(blocks["mlp"])
+    mlp["up"] = run(mlp["up"], x_mlp)
+    if "gate" in mlp:
+        mlp["gate"] = run(mlp["gate"], x_mlp)
+    mlp["down"] = run(mlp["down"], x_down)
+    blocks["mlp"] = mlp
+    out = dict(params)
+    out["blocks"] = blocks
+    return out

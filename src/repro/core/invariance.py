@@ -1,0 +1,213 @@
+"""Invariant transformations (paper §3.2): permutation P, scaling S, rotation R.
+
+Convention: FFN weights are stored JAX-style for ``x @ W`` —
+``w_up: (D, F)``, ``w_down: (F, D)``, optional ``w_gate: (D, F)`` (SwiGLU),
+optional biases ``b_up/b_gate: (F,)``. The paper's transform
+
+    W̄_up = P S R W_up,   b̄_up = P S R b_up,   W̄_down = W_down Rᵀ S⁻¹ Pᵀ
+
+acts on the hidden (F) axis: columns of up/gate, rows of down. Transforms are
+stored compactly as ``(pi, s, phi)`` — a permutation vector, a scale vector and
+a rotation-angle vector (paper: "we do not store P, S, R as matrices").
+
+Transforms are always applied to the ORIGINAL parameters (theta_0), with
+``(pi, s, phi)`` holding the cumulative transform — this avoids numerical
+drift over thousands of accepted search moves.
+
+Exactness (DESIGN.md §Arch-applicability):
+  - permutation: exact for any elementwise f (and for gated MLPs when the
+    same pi is applied to gate and up);
+  - scaling: exact iff f is positively homogeneous (ReLU family); used as the
+    paper's approximation mode for SiLU/GeLU;
+  - rotation: approximate for any nonlinear f; exact in the limit phi -> 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FFNTransform",
+    "identity_transform",
+    "apply_rotation_rows",
+    "apply_transform_ffn",
+    "apply_transform_mamba",
+    "propose",
+    "ProposalConfig",
+]
+
+
+class FFNTransform(NamedTuple):
+    """Cumulative per-layer transform. pi: (F,) int32; s: (F,) f32; phi: (F//2,) f32."""
+
+    pi: jnp.ndarray
+    s: jnp.ndarray
+    phi: jnp.ndarray
+
+
+def identity_transform(f_dim: int) -> FFNTransform:
+    return FFNTransform(
+        pi=jnp.arange(f_dim, dtype=jnp.int32),
+        s=jnp.ones((f_dim,), jnp.float32),
+        phi=jnp.zeros((f_dim // 2,), jnp.float32),
+    )
+
+
+def _rotate_pairs(w: jnp.ndarray, phi: jnp.ndarray, axis: int, inverse: bool) -> jnp.ndarray:
+    """Apply block-diagonal Givens rotation R (Eqn. 20) along ``axis`` of w.
+
+    Pairs are (2i, 2i+1). ``inverse`` applies R^T.
+    """
+    w = jnp.moveaxis(w, axis, 0)
+    f = w.shape[0]
+    wp = w.reshape((f // 2, 2) + w.shape[1:])
+    c, s = jnp.cos(phi), jnp.sin(phi)
+    if inverse:
+        s = -s
+    shape = (f // 2,) + (1,) * (w.ndim - 1)
+    c = c.reshape(shape)
+    s = s.reshape(shape)
+    a, b = wp[:, 0], wp[:, 1]
+    ra = c * a - s * b
+    rb = s * a + c * b
+    out = jnp.stack([ra, rb], axis=1).reshape(w.shape)
+    return jnp.moveaxis(out, 0, axis)
+
+
+def apply_rotation_rows(w: jnp.ndarray, phi: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """R @ w for w whose FIRST axis is the rotated (F) axis."""
+    return _rotate_pairs(w, phi, axis=0, inverse=inverse)
+
+
+def apply_transform_ffn(
+    t: FFNTransform,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    b_up: Optional[jnp.ndarray] = None,
+    w_gate: Optional[jnp.ndarray] = None,
+    b_gate: Optional[jnp.ndarray] = None,
+):
+    """Return (w_up', w_down', b_up', w_gate', b_gate') = PSR-transformed params.
+
+    Shapes: w_up/w_gate (D, F); w_down (F, D); b_up/b_gate (F,).
+    Order (paper Eqns. 21-22): rotate, then scale, then permute on the F axis;
+    the inverse order on w_down rows.
+    """
+    # --- up projection columns: R, S, P
+    up = _rotate_pairs(w_up, t.phi, axis=1, inverse=False)
+    up = up * t.s[None, :]
+    up = up[:, t.pi]
+    # --- down projection rows. Paper: W̄_down = W_down Rᵀ S⁻¹ Pᵀ with
+    # W_down: (D, F); ours is the transpose (F, D), so the row ops are
+    # down' = P S⁻¹ R · down — note FORWARD R on rows ((W Rᵀ)ᵀ = R Wᵀ).
+    down = _rotate_pairs(w_down, t.phi, axis=0, inverse=False)
+    down = down * (1.0 / t.s)[:, None]
+    down = down[t.pi, :]
+    out_b_up = None
+    if b_up is not None:
+        b = apply_rotation_rows(b_up, t.phi) * t.s
+        out_b_up = b[t.pi]
+    out_gate = None
+    out_b_gate = None
+    if w_gate is not None:
+        # gated MLP: act(x@Wg) * (x@Wu) — the SAME permutation must hit both;
+        # scaling/rotation are applied to the gate branch only through P (the
+        # elementwise product makes S/R on 'up' alone the invariant choice:
+        # scaling columns of up by s and rows of down by 1/s is exact for the
+        # linear 'up' branch; the gate branch is only permuted).
+        out_gate = w_gate[:, t.pi]
+        if b_gate is not None:
+            out_b_gate = b_gate[t.pi]
+    return up, down, out_b_up, out_gate, out_b_gate
+
+
+def invert_permutation(pi: jnp.ndarray) -> jnp.ndarray:
+    inv = jnp.zeros_like(pi)
+    return inv.at[pi].set(jnp.arange(pi.shape[0], dtype=pi.dtype))
+
+
+def apply_transform_mamba(
+    pi: jnp.ndarray,
+    w_in_x: jnp.ndarray,
+    w_in_z: jnp.ndarray,
+    conv_x: jnp.ndarray,
+    w_out: jnp.ndarray,
+    head_dim: int,
+):
+    """Within-head channel permutation for a Mamba2 block (beyond-paper; see
+    DESIGN.md §Arch-applicability).
+
+    pi must be block-structured: it permutes channels only WITHIN each head of
+    size ``head_dim`` (callers construct it that way). Then the depthwise conv
+    filters, the z (gate) columns, the x columns and the out_proj rows move
+    together and the block is exactly invariant.
+
+    Shapes: w_in_x / w_in_z: (D, d_inner); conv_x: (width, d_inner);
+    w_out: (d_inner, D).
+    """
+    return (
+        w_in_x[:, pi],
+        w_in_z[:, pi],
+        conv_x[:, pi],
+        w_out[pi, :],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Proposal sampling (Algorithm 1, lines 11-14)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProposalConfig:
+    """Random-walk hyper-parameters (paper §4.1)."""
+
+    sigma_s: float = 1e-2
+    sigma_r: float = 1e-5
+    subset_frac: float = 0.10  # move ~10% of neurons per step (paper §3.2)
+    use_permutation: bool = True
+    use_scaling: bool = True
+    use_rotation: bool = True
+
+
+def _partial_shuffle(key, pi: jnp.ndarray, n_move: int) -> jnp.ndarray:
+    """Shuffle a random subset of ``n_move`` entries of pi among themselves.
+
+    jit-friendly: n_move is static. Picks the first n_move indices of a random
+    permutation of positions, then cyclically reassigns their values through a
+    second random permutation.
+    """
+    f = pi.shape[0]
+    k1, k2 = jax.random.split(key)
+    pos = jax.random.permutation(k1, f)[:n_move]          # which slots move
+    order = jax.random.permutation(k2, n_move)            # how they exchange
+    vals = pi[pos]
+    return pi.at[pos].set(vals[order])
+
+
+def propose(key, t: FFNTransform, cfg: ProposalConfig) -> FFNTransform:
+    """Sample a candidate transform centered on the current one."""
+    f = t.pi.shape[0]
+    n_move = max(2, int(round(cfg.subset_frac * f)))
+    n_rot = max(1, int(round(cfg.subset_frac * (f // 2))))
+    k_p, k_s, k_sm, k_r, k_rm = jax.random.split(key, 5)
+
+    pi = t.pi
+    if cfg.use_permutation:
+        pi = _partial_shuffle(k_p, t.pi, n_move)
+
+    s = t.s
+    if cfg.use_scaling:
+        noise = jax.random.normal(k_s, (f,)) * cfg.sigma_s
+        mask = jnp.zeros((f,)).at[jax.random.permutation(k_sm, f)[:n_move]].set(1.0)
+        s = jnp.maximum(t.s + noise * mask, 1e-3)
+
+    phi = t.phi
+    if cfg.use_rotation:
+        noise = jax.random.normal(k_r, (f // 2,)) * cfg.sigma_r
+        mask = jnp.zeros((f // 2,)).at[jax.random.permutation(k_rm, f // 2)[:n_rot]].set(1.0)
+        phi = t.phi + noise * mask
+
+    return FFNTransform(pi=pi, s=s, phi=phi)

@@ -1,0 +1,55 @@
+"""Search objective (paper Eqn. 23): CE(X, quant(θ)) + α · MSE(H, H₀).
+
+Algorithm 1's listing uses an L_KL variant; both are provided
+(``objective="ce"`` follows Eqn. 23 and is the default; ``"kl"`` matches the
+algorithm listing — KL between the FP16 model's token distribution and the
+quantized model's, which needs no labels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import lm_loss
+
+__all__ = ["calib_ce", "calib_kl", "activation_mse", "resolve_alpha"]
+
+
+def calib_ce(logits, tokens, vocab_size: int):
+    """Next-token cross-entropy on the calibration batch."""
+    return lm_loss(logits[:, :-1], tokens[:, 1:], vocab_size)
+
+
+def calib_kl(logits_q, logits_fp, vocab_size: int):
+    """KL(p_fp || p_q) averaged over positions."""
+    V = logits_q.shape[-1]
+    if V > vocab_size:
+        mask = jnp.arange(V) < vocab_size
+        neg = jnp.finfo(jnp.float32).min / 2
+        logits_q = jnp.where(mask, logits_q, neg)
+        logits_fp = jnp.where(mask, logits_fp, neg)
+    lq = jax.nn.log_softmax(logits_q.astype(jnp.float32), axis=-1)
+    lp = jax.nn.log_softmax(logits_fp.astype(jnp.float32), axis=-1)
+    p = jnp.exp(lp)
+    return jnp.mean(jnp.sum(p * (lp - lq), axis=-1))
+
+
+def activation_mse(hidden_q, hidden_fp, n_match: int):
+    """MSE over the first ``n_match`` per-layer block outputs.
+
+    hidden_*: (L, B, S, D) stacks from forward(collect_hidden=True).
+    n_match == 0 disables activation matching (paper Table 4, '0 layers').
+    """
+    if n_match == 0:
+        return jnp.float32(0.0)
+    hq = hidden_q[:n_match].astype(jnp.float32)
+    hf = hidden_fp[:n_match].astype(jnp.float32)
+    return jnp.mean(jnp.square(hq - hf))
+
+
+def resolve_alpha(ce0: float, mse0: float, ce_weight: float = 10.0) -> float:
+    """Paper §4.1: α chosen so CE is ``ce_weight``× more important than the
+    activation MSE at the start of the search."""
+    if mse0 <= 0:
+        return 0.0
+    return float(ce0 / (ce_weight * mse0))

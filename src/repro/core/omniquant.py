@@ -1,0 +1,129 @@
+"""OmniQuant-lite baseline (Shao et al. 2024): learnable weight clipping (LWC)
++ learnable equivalent scaling (LET), trained with a straight-through
+estimator on block-wise output MSE.
+
+Per FFN block, the learnables are:
+  gamma/beta: per-group sigmoid-parameterized shrink of (max, min) for up/down
+  log_s:      hidden-axis equivalent scaling (the gradient-based counterpart
+              of the paper's discrete S search)
+optimized with Adam for ``steps`` iterations. This is a faithful but reduced
+re-implementation (block-wise error minimization, STE through round()).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, _grouped
+from repro.core.taps import capture_dense_taps
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+__all__ = ["fake_quant_lwc", "omniquant_process_dense"]
+
+
+def fake_quant_lwc(w, qcfg: QuantConfig, gamma, beta):
+    """Fake-quant with learnable clipping; differentiable via STE.
+
+    gamma/beta: (K//G, N) logits; sigmoid(·) shrinks max/min.
+    """
+    g = qcfg.resolve_group(w.shape[0])
+    wg = _grouped(w.astype(jnp.float32), g)
+    wmax = jnp.max(wg, axis=1) * jax.nn.sigmoid(gamma)
+    wmin = jnp.min(wg, axis=1) * jax.nn.sigmoid(beta)
+    scale = jnp.maximum((wmax - wmin) / (qcfg.q_max - qcfg.q_min), 1e-8)
+    zero = jnp.round(qcfg.q_min - wmin / scale)
+    q = wg / scale[:, None] + zero[:, None]
+    q_ste = q + jax.lax.stop_gradient(jnp.clip(jnp.round(q), qcfg.q_min, qcfg.q_max) - q)
+    dq = (q_ste - zero[:, None]) * scale[:, None]
+    return dq.reshape(w.shape).astype(w.dtype)
+
+
+def _adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m / (1 - b1 ** t)
+    vhat = v / (1 - b2 ** t)
+    return -lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "steps", "gated", "act_name"))
+def _optimize_block(w_up, w_down, w_gate, b_up, x, bits, group_size, steps,
+                    gated, act_name, lr=5e-3):
+    qcfg = QuantConfig(bits=bits, group_size=group_size)
+    act = L.activation_fn(act_name)
+    F = w_up.shape[1]
+    gsz = qcfg.resolve_group(w_up.shape[0])
+    gsz_d = qcfg.resolve_group(w_down.shape[0])
+
+    def ffn(wu, wd, wg, bu, x):
+        up = x @ wu + bu
+        h = act(x @ wg) * up if gated else act(up)
+        return h @ wd
+
+    y_fp = ffn(w_up, w_down, w_gate, b_up, x)
+
+    theta = {
+        "g_up": jnp.full((w_up.shape[0] // gsz, F), 4.0),
+        "b_up_c": jnp.full((w_up.shape[0] // gsz, F), 4.0),
+        "g_dn": jnp.full((F // gsz_d, w_down.shape[1]), 4.0),
+        "b_dn_c": jnp.full((F // gsz_d, w_down.shape[1]), 4.0),
+        "log_s": jnp.zeros((F,)),
+    }
+
+    def loss_fn(theta):
+        s = jnp.exp(theta["log_s"])
+        wu = fake_quant_lwc(w_up * s[None, :], qcfg, theta["g_up"], theta["b_up_c"])
+        wd = fake_quant_lwc(w_down / s[:, None], qcfg, theta["g_dn"], theta["b_dn_c"])
+        y = ffn(wu, wd, w_gate, b_up * s, x)
+        return jnp.mean(jnp.square(y - y_fp))
+
+    def step(carry, t):
+        theta, m, v = carry
+        loss, g = jax.value_and_grad(loss_fn)(theta)
+        def upd(p, gi, mi, vi):
+            d, mi, vi = _adam_update(gi, mi, vi, t + 1.0, lr)
+            return p + d, mi, vi
+        new = jax.tree.map(upd, theta, g, m, v)
+        is_triple = lambda x: isinstance(x, tuple)
+        theta = jax.tree.map(lambda x: x[0], new, is_leaf=is_triple)
+        m = jax.tree.map(lambda x: x[1], new, is_leaf=is_triple)
+        v = jax.tree.map(lambda x: x[2], new, is_leaf=is_triple)
+        return (theta, m, v), loss
+
+    zeros = jax.tree.map(jnp.zeros_like, theta)
+    (theta, _, _), losses = jax.lax.scan(
+        step, (theta, zeros, zeros), jnp.arange(steps, dtype=jnp.float32))
+
+    s = jnp.exp(theta["log_s"])
+    wu = fake_quant_lwc(w_up * s[None, :], qcfg, theta["g_up"], theta["b_up_c"])
+    wd = fake_quant_lwc(w_down / s[:, None], qcfg, theta["g_dn"], theta["b_dn_c"])
+    return wu, wd, b_up * s, losses
+
+
+def omniquant_process_dense(params, cfg: ModelConfig, calib_tokens,
+                            qcfg: QuantConfig, steps: int = 200):
+    """Block-wise LWC+LET optimization of every FFN. Returns params whose FFN
+    weights are the OPTIMIZED fake-quant weights (already on the grid)."""
+    taps = capture_dense_taps(params, cfg, calib_tokens)
+    x_mlp = taps["mlp_in"].reshape(taps["mlp_in"].shape[0], -1, cfg.d_model)
+
+    blocks = dict(params["blocks"])
+    mlp = dict(blocks["mlp"])
+    gated = "gate" in mlp
+    L_ = mlp["up"].shape[0]
+    b_up = mlp.get("b_up", jnp.zeros((L_, cfg.d_ff), mlp["up"].dtype))
+    gate = mlp.get("gate", jnp.zeros_like(mlp["up"]))
+
+    run = jax.vmap(lambda wu, wd, wg, bu, x: _optimize_block(
+        wu, wd, wg, bu, x, qcfg.bits, qcfg.group_size, steps, gated, cfg.activation))
+    wu, wd, bu, losses = run(mlp["up"], mlp["down"], gate, b_up, x_mlp)
+    mlp["up"], mlp["down"] = wu, wd
+    if "b_up" in mlp:
+        mlp["b_up"] = bu
+    blocks["mlp"] = mlp
+    out = dict(params)
+    out["blocks"] = blocks
+    return out, losses

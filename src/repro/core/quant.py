@@ -1,0 +1,280 @@
+"""Asymmetric integer group quantization (paper §3.1).
+
+Weights are quantized in groups of ``group_size`` *contiguous* values along the
+input (K) axis of a ``(K, N)`` weight used as ``x @ W``:
+
+    quant(W_g)   = clip(round(W_g / s_g) + z_g, q_min, q_max)        (Eqn. 1)
+    s_g          = (max(W_g) - min(W_g)) / (q_max - q_min)           (Eqn. 2)
+    z_g          = round(q_min - min(W_g) / s_g)                     (Eqn. 3)
+    dequant(q_g) = s_g * (q_g - z_g)                                 (Eqn. 4)
+
+``fake_quant`` is the quant→dequant roundtrip used by the discrete search;
+``QTensor`` is the packed storage format used by the serving path (codes are
+bit-packed into uint32 words along K).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantConfig",
+    "QTensor",
+    "compute_qparams",
+    "quantize_codes",
+    "dequantize_codes",
+    "fake_quant",
+    "pack_codes",
+    "unpack_codes",
+    "quantize_tensor",
+    "bits_per_param",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization configuration."""
+
+    bits: int = 2
+    group_size: int = 128  # groups along axis 0 (K); -1 => per-column (one group)
+    scale_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.bits < 1 or self.bits > 8:
+            raise ValueError(f"bits must be in [1, 8], got {self.bits}")
+
+    @property
+    def q_min(self) -> int:
+        return 0
+
+    @property
+    def q_max(self) -> int:
+        return (1 << self.bits) - 1
+
+    def resolve_group(self, k: int) -> int:
+        g = k if self.group_size in (-1, None) else self.group_size
+        if k % g != 0:
+            raise ValueError(f"K={k} not divisible by group_size={g}")
+        return g
+
+
+def _grouped(w: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(K, ...) -> (K//G, G, ...)."""
+    k = w.shape[0]
+    return w.reshape((k // group, group) + w.shape[1:])
+
+
+def compute_qparams(w: jnp.ndarray, cfg: QuantConfig):
+    """Closed-form scale / zero-point per group (Eqns. 2-3).
+
+    w: (K, N) or (K,). Returns (scale, zero), each (K//G, N) / (K//G,).
+    """
+    g = cfg.resolve_group(w.shape[0])
+    wg = _grouped(w, g)
+    wmax = jnp.max(wg, axis=1)
+    wmin = jnp.min(wg, axis=1)
+    scale = (wmax - wmin) / (cfg.q_max - cfg.q_min)
+    scale = jnp.maximum(scale, 1e-8).astype(cfg.scale_dtype)
+    zero = jnp.round(cfg.q_min - wmin / scale)
+    zero = jnp.clip(zero, cfg.q_min, cfg.q_max)
+    return scale, zero
+
+
+def quantize_codes(w: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                   cfg: QuantConfig) -> jnp.ndarray:
+    """Eqn. 1 with clipping to the representable range. Returns int32 codes."""
+    g = cfg.resolve_group(w.shape[0])
+    wg = _grouped(w, g)
+    q = jnp.round(wg / scale[:, None].astype(jnp.float32)) + zero[:, None]
+    q = jnp.clip(q, cfg.q_min, cfg.q_max)
+    return q.reshape(w.shape).astype(jnp.int32)
+
+
+def dequantize_codes(codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                     cfg: QuantConfig, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Eqn. 4."""
+    g = cfg.resolve_group(codes.shape[0])
+    qg = _grouped(codes.astype(jnp.float32), g)
+    w = (qg - zero[:, None]) * scale[:, None].astype(jnp.float32)
+    return w.reshape(codes.shape).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size"))
+def _fake_quant_impl(w, bits: int, group_size: int):
+    cfg = QuantConfig(bits=bits, group_size=group_size)
+    scale, zero = compute_qparams(w, cfg)
+    codes = quantize_codes(w, scale, zero, cfg)
+    return dequantize_codes(codes, scale, zero, cfg, out_dtype=w.dtype)
+
+
+def fake_quant(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """quant -> dequant roundtrip (the search's inner primitive).
+
+    Accepts (K, N), (K,) or stacked (L, K, N) / (E, K, N) inputs — grouping is
+    always along axis -2 for matrices (the K axis of ``x @ W``) and axis -1 for
+    vectors, applied independently per leading index.
+    """
+    if w.ndim == 1:
+        return _fake_quant_impl(w, cfg.bits, cfg.group_size if cfg.group_size != -1 else w.shape[0])
+    if w.ndim == 2:
+        return _fake_quant_impl(w, cfg.bits, cfg.resolve_group(w.shape[0]))
+    # stacked: vmap over leading axes
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out = jax.vmap(lambda m: _fake_quant_impl(m, cfg.bits, cfg.resolve_group(w.shape[-2])))(flat)
+    return out.reshape(lead + w.shape[-2:])
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (uint32 words along K)
+# ---------------------------------------------------------------------------
+
+def vals_per_word(bits: int) -> int:
+    return 32 // bits  # 3-bit -> 10 codes/word (2 bits/word wasted)
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack int codes in [0, 2^bits) into uint32 words along axis 0.
+
+    codes: (K, N) int32 with K % vals_per_word == 0 -> (K // vpw, N) uint32.
+    """
+    vpw = vals_per_word(bits)
+    k = codes.shape[0]
+    if k % vpw != 0:
+        raise ValueError(f"K={k} must be divisible by vals_per_word={vpw}")
+    c = codes.reshape((k // vpw, vpw) + codes.shape[1:]).astype(jnp.uint32)
+    return functools.reduce(
+        jnp.bitwise_or, [c[:, i] << jnp.uint32(i * bits) for i in range(vpw)])
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
+    """Inverse of pack_codes -> (K, N) int32."""
+    vpw = vals_per_word(bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    parts = [((packed >> jnp.uint32(i * bits)) & mask) for i in range(vpw)]
+    c = jnp.stack(parts, axis=1)  # (K//vpw, vpw, ...)
+    return c.reshape((c.shape[0] * vpw,) + packed.shape[1:]).astype(jnp.int32)[:k]
+
+
+# ---------------------------------------------------------------------------
+# QTensor: packed storage for the serving path
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Packed, group-quantized tensor.
+
+    ``shape`` is the LOGICAL trailing shape — (K, N) or (K,) — and never
+    includes stacking dims, so a stacked QTensor (e.g. scanned layer weights
+    with ``packed: (L, K_pad//vpw, N)``) keeps valid metadata when
+    ``lax.scan`` slices its arrays along axis 0.
+
+    packed: (..., K_pad // vals_per_word, N) uint32
+    scale / zero: (..., K_pad // G, N)
+    """
+
+    packed: jnp.ndarray
+    scale: jnp.ndarray
+    zero: jnp.ndarray
+    bits: int
+    group_size: int
+    shape: tuple  # logical (un-padded, un-stacked) shape
+
+    def tree_flatten(self):
+        return (self.packed, self.scale, self.zero), (self.bits, self.group_size, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale, zero = children
+        bits, group_size, shape = aux
+        return cls(packed, scale, zero, bits, group_size, shape)
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+    def dequantize(self, out_dtype=jnp.float32) -> jnp.ndarray:
+        cfg = QuantConfig(bits=self.bits, group_size=self.group_size)
+        k = self.shape[0]
+        n = self.shape[1] if len(self.shape) > 1 else 1
+        lead = self.packed.shape[:-2]
+        vpw = vals_per_word(self.bits)
+
+        def deq2d(packed, scale, zero):
+            k_pad = packed.shape[0] * vpw
+            codes = unpack_codes(packed, self.bits, k_pad)
+            return dequantize_codes(codes, scale, zero, cfg, out_dtype)[:k]
+
+        if not lead:
+            w = deq2d(self.packed, self.scale, self.zero)
+        else:
+            flat = (self.packed.reshape((-1,) + self.packed.shape[-2:]),
+                    self.scale.reshape((-1,) + self.scale.shape[-2:]),
+                    self.zero.reshape((-1,) + self.zero.shape[-2:]))
+            w = jax.vmap(deq2d)(*flat).reshape(lead + (k, n))
+        if len(self.shape) == 1:
+            w = w[..., 0]
+        return w
+
+    def memory_bytes(self) -> int:
+        return int(self.packed.size * 4 + self.scale.size * self.scale.dtype.itemsize
+                   + self.zero.size * self.zero.dtype.itemsize)
+
+
+def _quantize_2d(w2: jnp.ndarray, cfg: QuantConfig):
+    k = w2.shape[0]
+    g = cfg.resolve_group(k)
+    vpw = vals_per_word(cfg.bits)
+    lcm = int(np.lcm(g, vpw))
+    k_pad = lcm * int(np.ceil(k / lcm))
+    if k_pad != k:
+        w2 = jnp.concatenate([w2, jnp.zeros((k_pad - k, w2.shape[1]), w2.dtype)], axis=0)
+    cfg_p = dataclasses.replace(cfg, group_size=g)
+    scale, zero = compute_qparams(w2.astype(jnp.float32), cfg_p)
+    codes = quantize_codes(w2.astype(jnp.float32), scale, zero, cfg_p)
+    packed = pack_codes(codes, cfg.bits)
+    return packed, scale, zero, g
+
+
+def quantize_tensor(w: jnp.ndarray, cfg: QuantConfig) -> QTensor:
+    """Quantize + pack a weight into a QTensor.
+
+    (K, N) / (K,) quantize directly; higher-rank (..., K, N) inputs (stacked
+    layer or expert weights) are quantized independently per leading index.
+    """
+    if w.ndim <= 2:
+        orig_shape = tuple(w.shape)
+        w2 = w if w.ndim == 2 else w[:, None]
+        packed, scale, zero, g = _quantize_2d(w2, cfg)
+        return QTensor(packed, scale, zero, cfg.bits, g, orig_shape)
+    lead = w.shape[:-2]
+    logical = tuple(w.shape[-2:])
+    flat = w.reshape((-1,) + logical)
+    g = cfg.resolve_group(logical[0])
+
+    def q2d(m):
+        p, s, z, _ = _quantize_2d(m, cfg)
+        return p, s, z
+    packed, scale, zero = jax.vmap(q2d)(flat)
+    packed = packed.reshape(lead + packed.shape[1:])
+    scale = scale.reshape(lead + scale.shape[1:])
+    zero = zero.reshape(lead + zero.shape[1:])
+    return QTensor(packed, scale, zero, cfg.bits, g, logical)
+
+
+def bits_per_param(cfg: QuantConfig, scale_bits: int = 16, zero_bits: int = 4) -> float:
+    """Effective storage cost (paper Table 3 'Bits/Param' column)."""
+    vpw = vals_per_word(cfg.bits)
+    code_bits = 32.0 / vpw  # 3-bit stores at 3.2 bits/code
+    g = cfg.group_size if cfg.group_size not in (-1, None) else 1 << 30
+    return code_bits + (scale_bits + zero_bits) / g

@@ -1,0 +1,383 @@
+"""Activation-guided discrete search (paper Algorithm 1).
+
+Hill climbing over per-layer invariant transforms: at each step, sample a
+layer (a *unit*: a dense FFN, one MoE expert's FFN, or one Mamba block),
+propose a partial reshuffle of π plus Gaussian random-walk moves on (s, φ),
+re-quantize that unit, run the calibration forward pass, and accept iff the
+combined loss improves.
+
+TPU-native execution model (DESIGN.md §3): the whole proposal evaluation —
+transform → fake-quant → forward → loss — is ONE jitted function with the
+unit index as a traced scalar, so a single XLA program serves every step.
+Proposals come from counter-based ``jax.random`` keys: in a multi-host
+setting every host replays the same proposal stream and the accept decision
+derives from the (all-reduced) scalar loss, so hosts stay in lock-step with
+zero extra communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import invariance as inv
+from repro.core import objective as obj
+from repro.core.quant import QuantConfig, fake_quant
+from repro.models.config import ModelConfig
+from repro.models.model import forward
+
+__all__ = ["SearchConfig", "SearchResult", "DenseFFNAdapter", "MoEAdapter",
+           "MambaAdapter", "run_search"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    steps: int = 2000
+    seed: int = 0
+    objective: str = "ce"          # "ce" (Eqn. 23) | "kl" (Algorithm 1 listing)
+    n_match_layers: int = 10       # activation-matching depth (paper Table 4)
+    ce_weight: float = 10.0        # CE is 10x more important at step 0 (§4.1)
+    proposal: inv.ProposalConfig = dataclasses.field(default_factory=inv.ProposalConfig)
+    log_every: int = 200
+
+
+@dataclasses.dataclass
+class SearchResult:
+    params_q: dict                 # model with searched fake-quant weights installed
+    transforms: inv.FFNTransform   # stacked per-unit transforms
+    history: list                  # (step, loss, ce, mse, accepted)
+    accept_rate: float
+    final_loss: float
+    initial_loss: float
+
+
+def _tree_slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _tree_update(tree, i, new):
+    return jax.tree.map(lambda x, n: x.at[i].set(n), tree, new)
+
+
+# ---------------------------------------------------------------------------
+# Adapters: expose a model family's transformable units to the search
+# ---------------------------------------------------------------------------
+
+class DenseFFNAdapter:
+    """Dense decoder blocks: unit = one FFN (up[/gate]/down[,b_up,b_gate])."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_units = cfg.n_layers
+        self.f_dim = cfg.d_ff
+
+    def base_stack(self, params):
+        mlp = params["blocks"]["mlp"]
+        return {k: mlp[k] for k in ("up", "down", "gate", "b_up", "b_gate") if k in mlp}
+
+    def transform_unit(self, base, t: inv.FFNTransform, u):
+        b = _tree_slice(base, u)
+        up, down, b_up, gate, b_gate = inv.apply_transform_ffn(
+            t, b["up"], b["down"], b.get("b_up"), b.get("gate"), b.get("b_gate"))
+        out = {"up": up, "down": down}
+        if b_up is not None:
+            out["b_up"] = b_up
+        if gate is not None:
+            out["gate"] = gate
+        if b_gate is not None:
+            out["b_gate"] = b_gate
+        return out
+
+    def quant_unit(self, unit, qcfg: QuantConfig):
+        out = {}
+        for k, v in unit.items():
+            out[k] = fake_quant(v, qcfg) if v.ndim >= 2 else v
+        return out
+
+    def install(self, params, fq_stack):
+        params = dict(params)
+        blocks = dict(params["blocks"])
+        blocks["mlp"] = {**blocks["mlp"], **fq_stack}
+        params["blocks"] = blocks
+        return params
+
+
+class MoEAdapter:
+    """MoE blocks: unit = one expert's FFN. n_units = L * E (per-expert search
+    — under expert parallelism each shard searches its own experts)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.E = cfg.moe.num_experts
+        self.n_units = cfg.n_layers * self.E
+        self.f_dim = cfg.d_ff
+
+    def base_stack(self, params):
+        moe = params["blocks"]["moe"]
+        # (L, E, ...) -> (L*E, ...) unit-major
+        return {k: moe[k].reshape((-1,) + moe[k].shape[2:])
+                for k in ("up", "down", "gate") if k in moe}
+
+    def transform_unit(self, base, t, u):
+        b = _tree_slice(base, u)
+        up, down, _, gate, _ = inv.apply_transform_ffn(
+            t, b["up"], b["down"], None, b.get("gate"), None)
+        out = {"up": up, "down": down}
+        if gate is not None:
+            out["gate"] = gate
+        return out
+
+    def quant_unit(self, unit, qcfg):
+        return {k: fake_quant(v, qcfg) for k, v in unit.items()}
+
+    def install(self, params, fq_stack):
+        params = dict(params)
+        blocks = dict(params["blocks"])
+        moe = dict(blocks["moe"])
+        L = self.cfg.n_layers
+        for k, v in fq_stack.items():
+            moe[k] = v.reshape((L, self.E) + v.shape[1:])
+        blocks["moe"] = moe
+        params["blocks"] = blocks
+        return params
+
+
+class MambaAdapter:
+    """Mamba2 blocks: unit = one block; permutation-only, block-structured
+    within heads (exact invariance — DESIGN.md §Arch-applicability)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # hybrid stacks: only the mamba blocks are units of this adapter
+        self.n_units = (cfg.hybrid_layout()[0] if cfg.block_pattern == "hybrid"
+                        else cfg.n_layers)
+        s = cfg.ssm
+        self.di = s.d_inner(cfg.d_model)
+        self.head_dim = s.head_dim
+        self.f_dim = self.di
+
+    def base_stack(self, params):
+        ssm = params["blocks"]["ssm"]
+        return {k: ssm[k] for k in ("w_z", "w_x", "conv_x", "conv_b_x",
+                                    "norm_w", "out_proj")}
+
+    def transform_unit(self, base, t: inv.FFNTransform, u):
+        b = _tree_slice(base, u)
+        pi = t.pi  # MUST be within-head block structured (self.propose)
+        return {
+            "w_z": b["w_z"][:, pi],
+            "w_x": b["w_x"][:, pi],
+            "conv_x": b["conv_x"][:, pi],
+            "conv_b_x": b["conv_b_x"][pi],
+            "norm_w": b["norm_w"][pi],
+            "out_proj": b["out_proj"][pi, :],
+        }
+
+    def quant_unit(self, unit, qcfg):
+        out = dict(unit)
+        out["w_z"] = fake_quant(unit["w_z"], qcfg)
+        out["w_x"] = fake_quant(unit["w_x"], qcfg)
+        out["out_proj"] = fake_quant(unit["out_proj"], qcfg)
+        return out
+
+    def install(self, params, fq_stack):
+        params = dict(params)
+        blocks = dict(params["blocks"])
+        blocks["ssm"] = {**blocks["ssm"], **fq_stack}
+        params["blocks"] = blocks
+        return params
+
+    def propose(self, key, t: inv.FFNTransform, pcfg: inv.ProposalConfig) -> inv.FFNTransform:
+        """Within-head partial shuffle: pick one head, shuffle a fraction."""
+        hd = self.head_dim
+        n_heads = self.di // hd
+        n_move = max(2, int(round(pcfg.subset_frac * hd)))
+        k1, k2, k3 = jax.random.split(key, 3)
+        head = jax.random.randint(k1, (), 0, n_heads)
+        pos_in_head = jax.random.permutation(k2, hd)[:n_move] + head * hd
+        order = jax.random.permutation(k3, n_move)
+        vals = t.pi[pos_in_head]
+        pi = t.pi.at[pos_in_head].set(vals[order])
+        return inv.FFNTransform(pi=pi, s=t.s, phi=t.phi)
+
+
+class SharedFFNAdapter:
+    """Hybrid (Zamba2): the ONE shared attention block's FFN as a single unit
+    (its weights are shared across all applications, so one transform covers
+    every application exactly)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_units = 1
+        self.f_dim = cfg.d_ff
+
+    def base_stack(self, params):
+        mlp = params["shared"]["mlp"]
+        keep = {k: mlp[k] for k in ("up", "down", "gate", "b_up", "b_gate") if k in mlp}
+        return jax.tree.map(lambda x: x[None], keep)  # stack dim of 1
+
+    def transform_unit(self, base, t: inv.FFNTransform, u):
+        b = _tree_slice(base, u)
+        up, down, b_up, gate, b_gate = inv.apply_transform_ffn(
+            t, b["up"], b["down"], b.get("b_up"), b.get("gate"), b.get("b_gate"))
+        out = {"up": up, "down": down}
+        if b_up is not None:
+            out["b_up"] = b_up
+        if gate is not None:
+            out["gate"] = gate
+        if b_gate is not None:
+            out["b_gate"] = b_gate
+        return out
+
+    quant_unit = DenseFFNAdapter.quant_unit
+
+    def install(self, params, fq_stack):
+        params = dict(params)
+        shared = dict(params["shared"])
+        shared["mlp"] = {**shared["mlp"],
+                         **jax.tree.map(lambda x: x[0], fq_stack)}
+        params["shared"] = shared
+        return params
+
+
+def make_adapter(cfg: ModelConfig, phase: str = None):
+    if cfg.block_pattern in ("dense",):
+        return DenseFFNAdapter(cfg)
+    if cfg.block_pattern == "moe":
+        return MoEAdapter(cfg)
+    if cfg.block_pattern == "ssm":
+        return MambaAdapter(cfg)
+    if cfg.block_pattern == "hybrid":
+        # two-phase composite: "mamba" (within-head P, exact) then "shared"
+        # (full P/S/R on the shared block's FFN) — see run_search_hybrid.
+        if phase == "shared":
+            return SharedFFNAdapter(cfg)
+        return MambaAdapter(cfg)
+    raise NotImplementedError(f"no search adapter for pattern {cfg.block_pattern!r}")
+
+
+def run_search_hybrid(params_fp, params_base, cfg, qcfg, calib_tokens,
+                      scfg: SearchConfig = SearchConfig(), forward_kwargs=None):
+    """Hybrid (Zamba2) InvarExplore: phase 1 hill-climbs the Mamba blocks'
+    within-head permutations; phase 2 hill-climbs the shared FFN's P/S/R,
+    starting from phase 1's quantized model."""
+    half = dataclasses.replace(scfg, steps=scfg.steps // 2)
+    r1 = run_search(params_fp, params_base, cfg, qcfg, calib_tokens, half,
+                    adapter=MambaAdapter(cfg), forward_kwargs=forward_kwargs)
+    r2 = run_search(params_fp, r1.params_q, cfg, qcfg, calib_tokens, half,
+                    adapter=SharedFFNAdapter(cfg), forward_kwargs=forward_kwargs)
+    r2.history = r1.history + r2.history
+    r2.initial_loss = r1.initial_loss
+    r2.accept_rate = (r1.accept_rate + r2.accept_rate) / 2
+    return r2
+
+
+# ---------------------------------------------------------------------------
+# The search loop (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def run_search(
+    params_fp: dict,
+    params_base: dict,
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    calib_tokens: jnp.ndarray,
+    scfg: SearchConfig = SearchConfig(),
+    adapter=None,
+    forward_kwargs: Optional[dict] = None,
+) -> SearchResult:
+    """params_fp: original FP model (reference H₀ / KL targets).
+
+    params_base: base-method-processed model — FFN weights are the
+    *dequantized-domain* weights the base PTQ method produced (AWQ-scaled,
+    GPTQ-compensated, or plain θ₀ for RTN); all OTHER quantizable weights must
+    already be fake-quantized (they stay fixed during the search).
+    """
+    adapter = adapter or make_adapter(cfg)
+    fwd_kw = forward_kwargs or {}
+    n_match = min(scfg.n_match_layers, cfg.n_layers)
+
+    base = adapter.base_stack(params_base)
+    proposer = getattr(adapter, "propose", None) or (
+        lambda key, t, pcfg: inv.propose(key, t, pcfg))
+
+    # init transforms (identity) + initial fake-quant of every unit
+    t0 = inv.identity_transform(adapter.f_dim)
+    transforms = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (adapter.n_units,) + x.shape).copy(), t0)
+    # vmap so per-unit slices (not the stacked arrays) hit quant_unit — keeps
+    # the ndim>=2 "skip biases" check correct.
+    fq_stack = jax.vmap(lambda b: adapter.quant_unit(b, qcfg))(base)
+
+    # reference forward (FP model)
+    logits_fp, hidden_fp = forward(params_fp, cfg, calib_tokens,
+                                   collect_hidden=True, **fwd_kw)
+    hidden_fp = jax.lax.stop_gradient(hidden_fp[:n_match]) if n_match else None
+    logits_fp = jax.lax.stop_gradient(logits_fp)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def eval_stack(fq):
+        params_q = adapter.install(params_base, fq)
+        logits, hidden = forward(params_q, cfg, calib_tokens,
+                                 collect_hidden=True, **fwd_kw)
+        if scfg.objective == "kl":
+            ce = obj.calib_kl(logits, logits_fp, cfg.vocab_size)
+        else:
+            ce = obj.calib_ce(logits, calib_tokens, cfg.vocab_size)
+        mse = (obj.activation_mse(hidden, hidden_fp, n_match)
+               if n_match else jnp.float32(0.0))
+        return ce, mse
+
+    ce0, mse0 = map(float, eval_stack(fq_stack))
+    alpha = obj.resolve_alpha(ce0, mse0, scfg.ce_weight) if n_match else 0.0
+    best = ce0 + alpha * float(mse0)
+    initial_loss = best
+
+    @jax.jit
+    def step_fn(key, transforms, fq_stack, u):
+        k_prop, _ = jax.random.split(key)
+        t_u = _tree_slice(transforms, u)
+        t_new = proposer(k_prop, inv.FFNTransform(*t_u), scfg.proposal)
+        unit = adapter.transform_unit(base, t_new, u)
+        unit_fq = adapter.quant_unit(unit, qcfg)
+        fq_new = _tree_update(fq_stack, u, unit_fq)
+        ce, mse = eval_stack(fq_new)
+        loss = ce + alpha * mse
+        return loss, ce, mse, fq_new, t_new
+
+    rng = np.random.default_rng(scfg.seed)
+    key = jax.random.PRNGKey(scfg.seed)
+    history = [(0, best, ce0, float(mse0), True)]
+    n_accept = 0
+    t_start = time.time()
+    for step in range(1, scfg.steps + 1):
+        key, sub = jax.random.split(key)
+        u = jnp.int32(rng.integers(adapter.n_units))
+        loss, ce, mse, fq_new, t_new = step_fn(sub, transforms, fq_stack, u)
+        loss = float(loss)
+        accepted = loss < best
+        if accepted:
+            best = loss
+            fq_stack = fq_new
+            transforms = _tree_update(transforms, u, t_new)
+            n_accept += 1
+        history.append((step, loss, float(ce), float(mse), accepted))
+        if scfg.log_every and step % scfg.log_every == 0:
+            rate = n_accept / step
+            print(f"[search] step={step} best={best:.5f} accept={rate:.2%} "
+                  f"({(time.time() - t_start):.1f}s)")
+
+    params_q = adapter.install(params_base, fq_stack)
+    return SearchResult(
+        params_q=params_q,
+        transforms=transforms,
+        history=history,
+        accept_rate=n_accept / max(scfg.steps, 1),
+        final_loss=best,
+        initial_loss=initial_loss,
+    )

@@ -1,0 +1,62 @@
+"""Per-linear input capture ("taps") for calibration-based PTQ (GPTQ/AWQ).
+
+Re-runs the dense decoder block math with the same ``repro.models.layers``
+primitives, emitting the input activations of every quantizable linear:
+
+    attn_in (L,B,S,D)   — input of wq/wk/wv
+    attn_mid (L,B,S,HqDh) — input of wo
+    mlp_in (L,B,S,D)    — input of up/gate
+    mlp_mid (L,B,S,F)   — input of down
+
+Dense pattern only (the paper's OPT family); other families use RTN/AWQ-lite
+paths documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.model import embed_tokens
+
+__all__ = ["capture_dense_taps"]
+
+
+def capture_dense_taps(params, cfg: ModelConfig, tokens):
+    assert cfg.block_pattern == "dense" and not cfg.is_enc_dec
+    B, S = tokens.shape
+    h = embed_tokens(params, cfg, tokens, jnp.arange(S))
+    positions = jnp.arange(S)
+
+    def body(carry, pl):
+        h = carry
+        a_in = L.apply_norm(h, pl["ln1"], cfg.norm)
+        q, k, v = L.attn_qkv(pl["attn"], cfg, a_in, positions)
+        attn = L.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_inner)
+        attn_mid = attn.reshape(B, S, -1)
+        a = attn_mid @ pl["attn"]["wo"]
+        if "bo" in pl["attn"]:
+            a = a + pl["attn"]["bo"]
+        h = h + a
+        m_in = L.apply_norm(h, pl["ln2"], cfg.norm)
+        act = L.activation_fn(cfg.activation)
+        up = m_in @ pl["mlp"]["up"]
+        if "b_up" in pl["mlp"]:
+            up = up + pl["mlp"]["b_up"]
+        if cfg.gated_mlp:
+            g = m_in @ pl["mlp"]["gate"]
+            if "b_gate" in pl["mlp"]:
+                g = g + pl["mlp"]["b_gate"]
+            mid = act(g) * up
+        else:
+            mid = act(up)
+        out = mid @ pl["mlp"]["down"]
+        if "b_down" in pl["mlp"]:
+            out = out + pl["mlp"]["b_down"]
+        h = h + out
+        taps = {"attn_in": a_in, "attn_mid": attn_mid, "mlp_in": m_in, "mlp_mid": mid}
+        return h, taps
+
+    _, taps = jax.lax.scan(body, h, params["blocks"])
+    return taps

@@ -1,0 +1,6 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.pipeline import DataConfig, SyntheticZipf, TokenDataset, make_pipeline
+from repro.data.calib import calibration_tokens
+
+__all__ = ["ByteTokenizer", "DataConfig", "SyntheticZipf", "TokenDataset",
+           "make_pipeline", "calibration_tokens"]

@@ -1,0 +1,18 @@
+"""Calibration-set extraction (paper §4.1: 32 sequences × 512 tokens from the
+Pile; here: deterministic sequences from the training source so the benchmark
+models are calibrated in-distribution, like the paper's setup)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, make_pipeline
+
+__all__ = ["calibration_tokens"]
+
+
+def calibration_tokens(vocab_size: int, n_seqs: int = 32, seq_len: int = 512,
+                       seed: int = 99, source=None) -> np.ndarray:
+    cfg = DataConfig(seq_len=seq_len, global_batch=n_seqs, seed=seed,
+                     vocab_size=vocab_size)
+    batch_at = make_pipeline(cfg, source=source)
+    return batch_at(0)

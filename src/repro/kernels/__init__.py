@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute of ultra-low-bit serving:
+
+- ``quant_matmul``: fused dequant (packed 1-8 bit) + MXU matmul — the serving
+  hot loop; cuts weight HBM traffic by the packing factor.
+- ``group_quant``: fused group quant->dequant roundtrip — the discrete
+  search's inner primitive (one VMEM pass instead of four HBM passes).
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` wraps them with
+jit + CPU interpret-mode fallback; tests sweep shapes/dtypes against the
+oracles.
+"""
+from repro.kernels.ops import quant_matmul, group_quant, flash_decode, on_tpu
+
+__all__ = ["quant_matmul", "group_quant", "flash_decode", "on_tpu"]

@@ -1,0 +1,83 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; elsewhere (this CPU container) they
+execute in ``interpret=True`` mode for correctness, or fall back to the
+pure-jnp reference when a shape violates the tiling constraints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.group_quant import group_quant_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+
+__all__ = ["quant_matmul", "group_quant", "flash_decode", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tileable_matmul(M, K, N, bits, group):
+    vpw = 32 // bits
+    return (K % group == 0 and K % vpw == 0 and M % 8 == 0 and N % 128 == 0
+            and group % vpw in (0,) or group >= vpw)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "use_pallas"))
+def quant_matmul(x, packed, scale, zero, *, bits: int, group: int,
+                 use_pallas: bool = True):
+    """x (M, K) @ dequant(packed (K//vpw, N)) -> (M, N) f32.
+
+    The serving path's hot matmul: weights stream packed (2-bit: 16 codes per
+    uint32 word), dequantized tile-by-tile in VMEM.
+    """
+    M, K = x.shape
+    N = packed.shape[1]
+    vpw = 32 // bits
+    ok = (K % group == 0 and K % vpw == 0 and M % 8 == 0 and N % 128 == 0)
+    if not (use_pallas and ok):
+        return ref.quant_matmul_ref(x, packed, scale, zero, bits, group)
+    bk = K
+    for cand in (512, 256, 128):
+        if K % cand == 0 and cand % group == 0 and cand % vpw == 0:
+            bk = cand
+            break
+    bm = 128 if M % 128 == 0 else 8
+    bn = 256 if N % 256 == 0 else 128
+    return quant_matmul_pallas(x, packed, scale, zero, bits=bits, group=group,
+                               bm=bm, bk=bk, bn=bn, interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("kv_len", "chunk", "use_pallas"))
+def flash_decode(q, k, v, k_scale=None, v_scale=None, *, kv_len=None,
+                 chunk: int = 512, use_pallas: bool = True):
+    """Fused one-token decode attention over a bf16 or int8 KV cache."""
+    S = k.shape[1]
+    ok = S % min(chunk, S) == 0
+    if not (use_pallas and ok):
+        return ref.flash_decode_ref(q, k, v, k_scale, v_scale, kv_len)
+    return flash_decode_pallas(q, k, v, k_scale, v_scale, kv_len=kv_len,
+                               chunk=chunk, interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "use_pallas"))
+def group_quant(w, *, bits: int, group: int, use_pallas: bool = True):
+    """Fused fake-quant roundtrip (the search inner primitive).
+
+    Returns (fq (K, N), scale (K//G, N), zero (K//G, N)).
+    """
+    K, N = w.shape
+    ok = (K % group == 0 and N % 128 == 0)
+    if not (use_pallas and ok):
+        return ref.group_quant_ref(w, bits, group)
+    n_groups = K // group
+    bg = 4 if n_groups % 4 == 0 else (2 if n_groups % 2 == 0 else 1)
+    bn = 256 if N % 256 == 0 else 128
+    return group_quant_pallas(w, bits=bits, group=group, bg=bg, bn=bn,
+                              interpret=not on_tpu())

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (QuantConfig, compute_qparams, quantize_codes,
+                              dequantize_codes, unpack_codes)
+
+__all__ = ["quant_matmul_ref", "group_quant_ref", "dequant_ref",
+           "flash_decode_ref"]
+
+
+def flash_decode_ref(q, k, v, k_scale=None, v_scale=None, kv_len=None):
+    """Dense one-token attention oracle. q (B,H,Dh); k/v (B,S,H,Dh)."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None].astype(jnp.float32)
+        vf = vf * v_scale[..., None].astype(jnp.float32)
+    dh = q.shape[-1]
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf) * dh ** -0.5
+    if kv_len is not None:
+        mask = jnp.arange(k.shape[1]) < kv_len
+        s = jnp.where(mask[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vf)
+
+
+def dequant_ref(packed, scale, zero, bits: int, group_size: int, k: int):
+    """packed (K_pad//vpw, N) uint32 -> dense weights (K, N) f32.
+
+    Dequantizes at the PADDED length (scale/zero rows cover K_pad when
+    lcm(group, vals_per_word) padding was applied, e.g. 3-bit), then slices.
+    """
+    cfg = QuantConfig(bits=bits, group_size=group_size)
+    k_pad = packed.shape[0] * (32 // bits)
+    codes = unpack_codes(packed, bits, k_pad)
+    return dequantize_codes(codes, scale, zero, cfg)[:k]
+
+
+def quant_matmul_ref(x, packed, scale, zero, bits: int, group_size: int):
+    """x (M, K) @ dequant(packed) -> (M, N) f32."""
+    k = x.shape[1]
+    w = dequant_ref(packed, scale, zero, bits, group_size, k)
+    return x.astype(jnp.float32) @ w
+
+
+def group_quant_ref(w, bits: int, group_size: int):
+    """Fused quant->dequant roundtrip; returns (fq, scale, zero)."""
+    cfg = QuantConfig(bits=bits, group_size=group_size)
+    scale, zero = compute_qparams(w.astype(jnp.float32), cfg)
+    codes = quantize_codes(w.astype(jnp.float32), scale, zero, cfg)
+    fq = dequantize_codes(codes, scale, zero, cfg, out_dtype=w.dtype)
+    return fq, scale, zero

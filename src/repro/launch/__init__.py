@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, multi-pod dry-run, training, serving,
+roofline analysis. NOTE: dryrun.py sets XLA_FLAGS at import — import it only
+in a dedicated process."""

@@ -1,0 +1,102 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds-per-step per chip:
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+cost_analysis()/HLO both count a scan (while-loop) body ONCE, so absolute
+numbers come from the Δ-trick: compile the same program at L2 and L3 layers;
+the difference is the exact per-layer per-device cost; the full-depth value is
+linear extrapolation (validated in tests/test_roofline.py). Collective bytes
+are parsed from ``compiled.as_text()`` result/operand shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+# TPU v5e per-chip constants (published spec numbers)
+HW = {
+    "peak_flops": 197e12,   # bf16
+    "hbm_bw": 819e9,        # bytes/s
+    "ici_bw": 50e9,         # bytes/s/link (~45-50 GB/s on v5e)
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*)\)")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind byte counts from an HLO module text (counts '-start' once,
+    skips '-done'). Bytes = max(result, operands) per op — a conservative
+    proxy for the data a collective moves through the links."""
+    out: Counter = Counter()
+    for m in _LINE_RE.finditer(hlo_text):
+        result_t, op, _start, operands = m.groups()
+        rb = _type_bytes(result_t)
+        ob = _type_bytes(operands)
+        out[op] += max(rb, ob)
+    return dict(out)
+
+
+def extrapolate(v2: float, v3: float, l2: int, l3: int, l_full: int) -> float:
+    """Linear-in-layers extrapolation of a per-device cost."""
+    slope = (v3 - v2) / max(l3 - l2, 1)
+    return v2 + slope * (l_full - l2)
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float, coll_dev: float) -> dict:
+    terms = {
+        "compute_s": flops_dev / HW["peak_flops"],
+        "memory_s": bytes_dev / HW["hbm_bw"],
+        "collective_s": coll_dev / HW["ici_bw"],
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    terms["dominant"] = dominant
+    # roofline fraction: useful-step-time ratio if the dominant term were the
+    # only cost vs. a naive serial sum (overlap-free) execution
+    terms["overlap_fraction"] = bound / total if total > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, n_tokens: int, train: bool) -> float:
+    """6·N·D (train) or 2·N·D (inference) with N = active params."""
+    n = cfg.active_param_count()
+    return (6.0 if train else 2.0) * n * n_tokens

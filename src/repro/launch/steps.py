@@ -1,0 +1,195 @@
+"""Step factories + input ShapeDtypeStruct specs for every (arch × shape).
+
+Shapes (assignment spec):
+    train_4k     seq 4096   batch 256   -> train_step (fwd+bwd+AdamW)
+    prefill_32k  seq 32768  batch 32    -> serve_prefill (quantized weights)
+    decode_32k   seq 32768  batch 128   -> serve_step (1 new token, KV cache)
+    long_500k    seq 524288 batch 1     -> serve_step (SSM/hybrid only)
+
+``long_500k`` is SKIPPED for pure full-attention archs per the assignment
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig
+from repro.models.config import ModelConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.quantized.qmodel import pack_model
+
+__all__ = ["SHAPES", "shape_applicable", "make_train_step", "make_serve_step",
+           "make_prefill_step", "input_specs", "param_structs", "opt_structs",
+           "qparam_structs", "cache_structs"]
+
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+_SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.block_pattern in _SUBQUADRATIC
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    accum_steps: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum_steps > 1`` microbatches the global batch (gradient accumulation
+    via lax.scan): activation memory scales down ~accum_steps× at the cost of
+    accum_steps weight passes — the standard fix when a train cell's peak
+    memory exceeds HBM (e.g. zamba2-7b × train_4k, EXPERIMENTS.md §Dry-run).
+    """
+    schedule = cosine_schedule(opt_cfg)
+    prefix = cfg.frontend_len if cfg.frontend == "vision" else 0
+
+    def loss_of(p, mb):
+        kw = {}
+        if cfg.frontend == "vision":
+            kw["vision_embeds"] = mb["vision_embeds"]
+        if cfg.is_enc_dec:
+            kw["enc_embeds"] = mb["enc_embeds"]
+        tokens = mb["tokens"]
+        logits = M.forward(p, cfg, tokens, **kw)
+        if prefix:
+            logits = logits[:, prefix:]
+        return M.lm_loss(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros), mbs)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        params2, opt2, metrics = adamw_update(params, grads, opt_state, opt_cfg, schedule)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params_q, tokens(B,1), cache, index) -> (next_token(B,1), cache)."""
+
+    def serve_step(params_q, tokens, cache, index):
+        logits, cache = M.decode_step(params_q, cfg, tokens, cache, index)
+        V = logits.shape[-1]
+        if V > cfg.vocab_size:
+            logits = jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -jnp.inf)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """(params_q, batch) -> (last-token logits, cache)."""
+
+    def prefill_step(params_q, batch):
+        kw = {}
+        if cfg.frontend == "vision":
+            kw["vision_embeds"] = batch["vision_embeds"]
+        if cfg.is_enc_dec:
+            kw["enc_embeds"] = batch["enc_embeds"]
+        logits, cache = M.prefill(params_q, cfg, batch["tokens"], max_len, **kw)
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders (no allocation — dry-run inputs)
+# ---------------------------------------------------------------------------
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(M.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_structs(cfg: ModelConfig):
+    return jax.eval_shape(adamw_init, param_structs(cfg))
+
+
+def qparam_structs(cfg: ModelConfig, qcfg: QuantConfig):
+    """Packed-QTensor param tree as ShapeDtypeStructs (serving dry-run)."""
+    def build():
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        return pack_model(p, qcfg)
+    return jax.eval_shape(build)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, max_len))
+
+
+def _token_struct(batch, seq):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str, qcfg: Optional[QuantConfig] = None):
+    """Returns (step_kind, args_structs) for jit(...).lower(*args_structs)."""
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    if info["kind"] == "train":
+        batch = {"tokens": _token_struct(B, S)}
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.d_model), dt)
+        if cfg.is_enc_dec:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        return "train", (param_structs(cfg), opt_structs(cfg), batch)
+
+    qcfg = qcfg or QuantConfig(bits=2, group_size=128)
+    params_q = qparam_structs(cfg, qcfg)
+
+    if info["kind"] == "prefill":
+        batch = {"tokens": _token_struct(B, S)}
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.d_model), dt)
+        if cfg.is_enc_dec:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        return "prefill", (params_q, batch)
+
+    # decode: 1 new token against a seq_len-deep cache
+    cache = cache_structs(cfg, B, S)
+    if cfg.is_enc_dec:
+        # cross-attention cache from a prefilled encoder of length frontend_len
+        enc_len = cfg.frontend_len or S
+        hd = cfg.resolved_head_dim
+        cross = (jax.ShapeDtypeStruct((cfg.n_layers, B, enc_len, cfg.n_kv_heads, hd), dt),
+                 jax.ShapeDtypeStruct((cfg.n_layers, B, enc_len, cfg.n_kv_heads, hd), dt))
+        cache = dict(cache)
+        cache["cross"] = cross
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return "decode", (params_q, _token_struct(B, 1), cache, index)

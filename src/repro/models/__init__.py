@@ -1,0 +1,11 @@
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.model import (
+    init_params, forward, lm_loss, init_cache, decode_step, prefill,
+    dequant_tree, quantizable_paths,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig",
+    "init_params", "forward", "lm_loss", "init_cache", "decode_step",
+    "prefill", "dequant_tree", "quantizable_paths",
+]

@@ -1,0 +1,194 @@
+"""Composable model configuration covering every assigned architecture.
+
+One ``ModelConfig`` describes dense / MoE / SSM / hybrid / enc-dec stacks.
+Exact full-size configs live in ``repro/configs/<arch>.py``; reduced smoke
+configs are derived with ``.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+__all__ = ["MoEConfig", "SSMConfig", "ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+
+    def capacity(self, seq_len: int) -> int:
+        """Per-batch-row expert capacity (cumsum/positions are computed per
+        row so token dispatch never serializes across the data axis)."""
+        c = math.ceil(seq_len * self.top_k / self.num_experts * self.capacity_factor)
+        return max(1, c)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    conv_width: int = 4
+    expand: int = 2
+    n_groups: int = 1
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 256
+    vocab_size: int = 512
+    head_dim: int = 0                 # 0 => d_model // n_heads
+    activation: str = "silu"          # relu | silu | gelu
+    gated_mlp: bool = True
+    qk_norm: bool = False
+    use_bias: bool = False            # biases on mlp / attn out
+    attn_qkv_bias: bool = False       # qwen2-style qkv bias
+    pos_emb: str = "rope"             # rope | learned | none
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    max_seq_len: int = 8192           # for learned positions / cache default
+
+    block_pattern: str = "dense"      # dense | moe | ssm | hybrid
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_period: int = 6            # hybrid: every Nth block = shared attn+mlp
+
+    encoder_layers: int = 0           # >0 => encoder-decoder
+    frontend: str = "none"            # none | vision | audio (stub embeddings)
+    frontend_len: int = 0             # patches / frames prepended (vlm) or enc len
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+    attn_chunk: int = 1024            # kv-chunk for blocked online-softmax attention
+    vocab_pad_multiple: int = 256
+    # Dry-run Δ-trick only: fully unroll layer/inner scans so XLA cost
+    # analysis counts every iteration (while bodies are otherwise counted
+    # once). Never set for real execution.
+    unroll_layers: bool = False
+    unroll_inner: bool = False
+    # ---- perf-hillclimb knobs (EXPERIMENTS.md §Perf) ----
+    remat_policy: str = "full"        # full | dots | none  (train remat)
+    attn_softmax_dtype: str = "float32"   # float32 | bfloat16 score pipeline
+    gqa_repeat_kv: bool = False       # repeat KV to q-heads pre-attention so
+                                      # scores stay head-sharded under TP
+    kv_cache_dtype: str = "compute"   # compute | int8 (absmax-scaled KV cache)
+    use_flash_decode: bool = False    # route 1-token decode attention through
+                                      # the fused Pallas kernel (TPU; interpret
+                                      # mode elsewhere)
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attn_free(self) -> bool:
+        return self.block_pattern == "ssm"
+
+    def hybrid_layout(self) -> Tuple[int, int]:
+        """(n_mamba_blocks, n_attn_applications) for hybrid stacks.
+
+        Block i in [0, n_layers) is a shared attention block iff
+        i % period == period - 1.
+        """
+        n_attn = self.n_layers // self.hybrid_period
+        return self.n_layers - n_attn, n_attn
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once if tied)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hd = self.resolved_head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
+        mlp = d * f + f * d + (d * f if self.gated_mlp else 0)
+        per_dense = attn + mlp + 2 * d
+        n = 0
+        if self.block_pattern == "dense":
+            n += self.n_layers * per_dense
+        elif self.block_pattern == "moe":
+            e = self.moe.num_experts
+            n += self.n_layers * (attn + e * mlp + d * e + 2 * d)
+        elif self.block_pattern == "ssm":
+            n += self.n_layers * self._ssm_block_params()
+        elif self.block_pattern == "hybrid":
+            n_m, _ = self.hybrid_layout()
+            n += n_m * self._ssm_block_params() + per_dense  # one shared attn+mlp block
+        if self.is_enc_dec:
+            enc_attn = 4 * d * d
+            n += self.encoder_layers * (enc_attn + 2 * d * f + 2 * d)
+            n += self.n_layers * (attn + 2 * d)  # cross-attention blocks
+        n += v * d * (1 if self.tie_embeddings else 2)
+        if self.pos_emb == "learned":
+            n += self.max_seq_len * d
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (= param_count for non-MoE)."""
+        if self.block_pattern != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        hd = self.resolved_head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
+        mlp = d * f + f * d + (d * f if self.gated_mlp else 0)
+        k = self.moe.top_k
+        act = self.n_layers * (attn + k * mlp + d * self.moe.num_experts + 2 * d)
+        act += self.padded_vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return act
+
+    def _ssm_block_params(self) -> int:
+        d = self.d_model
+        s = self.ssm
+        di = s.d_inner(d)
+        h = s.n_heads(d)
+        g = s.n_groups
+        in_proj = d * (2 * di + 2 * g * s.d_state + h)
+        conv = s.conv_width * (di + 2 * g * s.d_state)
+        out_proj = di * d
+        return in_proj + conv + out_proj + 3 * h + di + d
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        base = dict(
+            n_layers=min(self.n_layers, 2 if self.block_pattern != "hybrid" else self.hybrid_period + 1),
+            d_model=64,
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=512,
+            head_dim=16 if self.head_dim else 0,
+            max_seq_len=256,
+            frontend_len=8 if self.frontend != "none" else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            moe=dataclasses.replace(self.moe, num_experts=4, top_k=2) if self.moe else None,
+            ssm=dataclasses.replace(self.ssm, d_state=16, head_dim=16, chunk=32) if self.ssm else None,
+            remat=False,
+            attn_chunk=64,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)

@@ -1,0 +1,30 @@
+"""Modality frontend STUBS (per assignment spec: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers generate deterministic synthetic embeddings for smoke tests and
+the ShapeDtypeStruct stand-ins used by the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def stub_vision_embeds(key, cfg: ModelConfig, batch: int, n_patches: int = None):
+    """Precomputed ViT patch embeddings (B, P, D) — stands in for InternViT."""
+    n = n_patches or cfg.frontend_len or 256
+    return jax.random.normal(key, (batch, n, cfg.d_model), jnp.dtype(cfg.compute_dtype)) * 0.02
+
+
+def stub_audio_frames(key, cfg: ModelConfig, batch: int, n_frames: int):
+    """Precomputed speech frame embeddings (B, T, D) — stands in for the
+    Seamless speech frontend (fbank + conformer downsampling)."""
+    return jax.random.normal(key, (batch, n_frames, cfg.d_model), jnp.dtype(cfg.compute_dtype)) * 0.02
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, length: int):
+    """ShapeDtypeStruct stand-in for dry-run input_specs()."""
+    return jax.ShapeDtypeStruct((batch, length, cfg.d_model), jnp.dtype(cfg.compute_dtype))

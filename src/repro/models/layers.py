@@ -1,0 +1,426 @@
+"""Shared neural building blocks: norms, RoPE, blocked attention, MLP, MoE."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)) * w + b
+
+
+def apply_norm(x, p, kind):
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def init_norm(d, kind, dtype):
+    p = {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def activation_fn(name):
+    return {"relu": jax.nn.relu, "silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim, theta):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (B, S, Dh//2) or (S, Dh//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (online-softmax) attention — memory O(S·chunk), GQA-aware
+# ---------------------------------------------------------------------------
+
+def blocked_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                      chunk: int = 1024, unroll: bool = False,
+                      softmax_dtype=jnp.float32, repeat_kv: bool = False,
+                      k_scale=None, v_scale=None):
+    """q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh). Returns (B, Sq, Hq, Dh).
+
+    Streams KV in chunks with an online softmax (flash-attention recurrence),
+    so the (Sq, Sk) logit matrix is never materialised — required for the
+    32k/500k shapes. ``q_offset`` is the absolute position of q[0] (decode);
+    ``kv_len`` masks cache positions >= kv_len.
+    """
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if repeat_kv and Hkv < Hq:
+        # §Perf: keep scores HEAD-SHARDED under TP — the (Hkv, rep) reshape of
+        # a head-sharded q axis defeats GSPMD propagation; repeating KV to Hq
+        # heads costs (rep/model_shards)x KV reads but shards all score math.
+        rep0 = Hq // Hkv
+        k = jnp.repeat(k, rep0, axis=2)
+        v = jnp.repeat(v, rep0, axis=2)
+        if k_scale is not None:
+            k_scale = jnp.repeat(k_scale, rep0, axis=2)
+            v_scale = jnp.repeat(v_scale, rep0, axis=2)
+        Hkv = Hq
+    rep = Hq // Hkv
+    sdt = jnp.dtype(softmax_dtype)
+    scale = Dh ** -0.5
+    qg = q.reshape(B, Sq, Hkv, rep, Dh).astype(sdt) * jnp.asarray(scale, sdt)
+
+    chunk = min(chunk, Sk)
+    if Sk % chunk != 0:  # pad KV to a chunk multiple; padding is masked out
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        Sk_pad = Sk + pad
+    else:
+        Sk_pad = Sk
+    n_chunks = Sk_pad // chunk
+    if kv_len is None:
+        kv_len = Sk
+    kc = k.reshape(B, n_chunks, chunk, Hkv, Dh).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dh).swapaxes(0, 1)
+    scale_xs = None
+    if k_scale is not None:  # int8 KV cache: per-(pos, head) absmax scales
+        scale_xs = (k_scale.reshape(B, n_chunks, chunk, Hkv).swapaxes(0, 1),
+                    v_scale.reshape(B, n_chunks, chunk, Hkv).swapaxes(0, 1))
+
+    q_pos = q_offset + jnp.arange(Sq)
+    neg = jnp.asarray(NEG_INF if sdt == jnp.float32 else -3e38, jnp.float32).astype(sdt)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        if scale_xs is not None:
+            kb, vb, ksb, vsb, start = xs
+            kb = kb.astype(sdt) * ksb[..., None].astype(sdt)
+            vb = vb.astype(sdt) * vsb[..., None].astype(sdt)
+        else:
+            kb, vb, start = xs
+        # logits: (B, Hkv, rep, Sq, chunk)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, kb.astype(sdt),
+                       preferred_element_type=sdt)
+        k_pos = start + jnp.arange(chunk)
+        mask = (k_pos[None, :] < kv_len)
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(mask[None, None, None], s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        p = jnp.exp(s - m_new[..., None].astype(sdt))  # (m is small: no Sk dim)
+        p = jnp.where(mask[None, None, None], p, jnp.zeros((), sdt))
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1).astype(jnp.float32)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p, vb.astype(sdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Sq, Dh), jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    xs = (kc, vc) + (scale_xs if scale_xs is not None else ()) + (starts,)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs, unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA, optional qk-norm / rope / biases)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    sd = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), dtype) * sd,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), dtype) * sd,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), dtype) * sd,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), dtype) * (hq * hd) ** -0.5,
+    }
+    if cfg.attn_qkv_bias or cfg.use_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.use_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_qkv(p, cfg: ModelConfig, x, positions):
+    """Project + rope. Returns q, k, v as (B, S, H, Dh)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_out(p, x_attn, cfg: ModelConfig):
+    B, S = x_attn.shape[:2]
+    out = x_attn.reshape(B, S, -1) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+def self_attention(p, cfg: ModelConfig, x, positions, *, causal=True, cache=None,
+                   cache_index=None):
+    """Full self-attention block body (no norm / residual).
+
+    cache: optional dict {"k": (B, Smax, Hkv, Dh), "v": ..., } updated at
+    ``cache_index`` (decode path).
+    """
+    q, k, v = attn_qkv(p, cfg, x, positions)
+    sdt = jnp.dtype(cfg.attn_softmax_dtype)
+    kw = dict(chunk=cfg.attn_chunk, unroll=cfg.unroll_inner,
+              softmax_dtype=sdt, repeat_kv=cfg.gqa_repeat_kv)
+    if cache is not None:
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), cache_index, axis=1)
+
+        if cfg.kv_cache_dtype == "int8":
+            # absmax per (B, pos, head) — quantize on write, dequant per chunk
+            ks = jnp.max(jnp.abs(k), axis=-1) / 127.0 + 1e-8
+            vs = jnp.max(jnp.abs(v), axis=-1) / 127.0 + 1e-8
+            kq = jnp.round(k / ks[..., None]).astype(jnp.int8)
+            vq = jnp.round(v / vs[..., None]).astype(jnp.int8)
+            new_cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                         "k_scale": upd(cache["k_scale"], ks),
+                         "v_scale": upd(cache["v_scale"], vs)}
+            kw.update(k_scale=new_cache["k_scale"], v_scale=new_cache["v_scale"])
+        else:
+            new_cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+        kv_len = cache_index + k.shape[1]
+        if cfg.use_flash_decode and q.shape[1] == 1:
+            out = _flash_decode_attention(cfg, q, new_cache, kv_len)
+        else:
+            out = blocked_attention(q, new_cache["k"], new_cache["v"],
+                                    causal=causal, q_offset=cache_index,
+                                    kv_len=kv_len, **kw)
+        return attn_out(p, out, cfg), new_cache
+    out = blocked_attention(q, k, v, causal=causal, **kw)
+    return attn_out(p, out, cfg), None
+
+
+def _flash_decode_attention(cfg: ModelConfig, q, cache, kv_len):
+    """Route a single decode token through the fused Pallas kernel
+    (kernels/flash_decode.py) — GQA heads repeated into the kernel call,
+    int8 caches dequantized in-register."""
+    from repro.kernels import flash_decode  # local import: kernels are optional
+    B, _, Hq, Dh = q.shape
+    k, v = cache["k"], cache["v"]
+    ks, vs = cache.get("k_scale"), cache.get("v_scale")
+    rep = Hq // k.shape[2]
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        if ks is not None:
+            ks = jnp.repeat(ks, rep, axis=2)
+            vs = jnp.repeat(vs, rep, axis=2)
+    # kernel expects a static kv_len; decode at a traced index falls back to
+    # full-length attention with zero-filled (masked-by-softmax-zero) slots:
+    # unwritten cache rows are zeros -> exp(0-scores) contributes; so instead
+    # mask via the scales path when quantized, else pass kv_len=None only if
+    # the cache is fully written. We keep correctness by computing over the
+    # whole buffer with -inf masking inside the kernel when kv_len is static.
+    kv_len_static = int(kv_len) if not isinstance(kv_len, jax.core.Tracer) else None
+    if kv_len_static is None:
+        # dynamic position: use the jnp online-softmax path (kernel needs a
+        # static mask bound) — still benefits from int8 dequant-in-chunk.
+        return blocked_attention(q, cache["k"], cache["v"], causal=True,
+                                 q_offset=kv_len - 1, kv_len=kv_len,
+                                 chunk=cfg.attn_chunk,
+                                 softmax_dtype=jnp.dtype(cfg.attn_softmax_dtype),
+                                 k_scale=ks if rep == 1 else cache.get("k_scale"),
+                                 v_scale=vs if rep == 1 else cache.get("v_scale"))
+    out = flash_decode(q[:, 0], k, v, ks, vs, kv_len=kv_len_static,
+                       chunk=min(512, k.shape[1]))
+    return out[:, None].astype(q.dtype)
+
+
+def cross_attention(p, cfg: ModelConfig, x, enc_kv):
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from encoder."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k, v = enc_kv
+    out = blocked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk, unroll=cfg.unroll_inner)
+    return attn_out(p, out, cfg)
+
+
+def cross_kv(p, cfg: ModelConfig, enc_h):
+    B, S, _ = enc_h.shape
+    hd = cfg.resolved_head_dim
+    k = enc_h @ p["wk"]
+    v = enc_h @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, S, cfg.n_kv_heads, hd), v.reshape(B, S, cfg.n_kv_heads, hd))
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": jax.random.normal(ks[0], (d, f), dtype) * d ** -0.5,
+        "down": jax.random.normal(ks[1], (f, d), dtype) * f ** -0.5,
+    }
+    if cfg.gated_mlp:
+        p["gate"] = jax.random.normal(ks[2], (d, f), dtype) * d ** -0.5
+    if cfg.use_bias:
+        p["b_up"] = jnp.zeros((f,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+        if cfg.gated_mlp:
+            p["b_gate"] = jnp.zeros((f,), dtype)
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x):
+    act = activation_fn(cfg.activation)
+    up = x @ p["up"]
+    if "b_up" in p:
+        up = up + p["b_up"]
+    if cfg.gated_mlp:
+        g = x @ p["gate"]
+        if "b_gate" in p:
+            g = g + p["b_gate"]
+        h = act(g) * up
+    else:
+        h = act(up)
+    out = h @ p["down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, per-row capacity, scatter dispatch -> EP all-to-all)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), dtype) * d ** -0.5,
+        "up": jax.random.normal(ks[1], (e, d, f), dtype) * d ** -0.5,
+        "down": jax.random.normal(ks[2], (e, f, d), dtype) * f ** -0.5,
+    }
+    if cfg.gated_mlp:
+        p["gate"] = jax.random.normal(ks[3], (e, d, f), dtype) * d ** -0.5
+    return p
+
+
+def moe_ffn(p, cfg: ModelConfig, x):
+    """x: (B, S, D). Positions/capacity computed PER ROW so the token cumsum
+    never crosses the data-sharded batch axis (no serializing collectives);
+    the (B, E, C, D) dispatch buffer resharded b:data -> e:model is the
+    all-to-all under expert parallelism.
+    """
+    B, S, D = x.shape
+    mcfg = cfg.moe
+    E, K = mcfg.num_experts, mcfg.top_k
+    C = mcfg.capacity(S)
+    act = activation_fn(cfg.activation)
+
+    logits = x @ p["router"]                       # (B, S, E)
+    gate_w, gate_idx = jax.lax.top_k(logits, K)    # (B, S, K)
+    gate_w = jax.nn.softmax(gate_w.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+    # slot layout: (B, S*K)
+    e_idx = gate_idx.reshape(B, S * K)
+    onehot = jax.nn.one_hot(e_idx, E, dtype=jnp.int32)          # (B, S*K, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1                     # (B, S*K, E)
+    pos = jnp.take_along_axis(pos_all, e_idx[..., None], axis=2)[..., 0]
+    keep = (pos < C)
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    x_slots = jnp.repeat(x, K, axis=1)                           # (B, S*K, D)
+    x_slots = x_slots * keep[..., None].astype(x.dtype)
+    b_iota = jnp.arange(B)[:, None] * jnp.ones((1, S * K), jnp.int32)
+    buf = jnp.zeros((B, E, C, D), x.dtype).at[b_iota, e_idx, pos_c].add(x_slots)
+
+    up = jnp.einsum("becd,edf->becf", buf, p["up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("becd,edf->becf", buf, p["gate"])
+        h = act(g) * up
+    else:
+        h = act(up)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["down"])
+
+    out_slots = out_buf[b_iota, e_idx, pos_c] * keep[..., None].astype(x.dtype)
+    out = out_slots.reshape(B, S, K, D) * gate_w[..., None]
+    return jnp.sum(out, axis=2)
+
+
+def moe_aux_loss(p, cfg: ModelConfig, x):
+    """Load-balancing auxiliary loss (Switch-style), used in training."""
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    E = cfg.moe.num_experts
+    _, idx = jax.lax.top_k(logits, cfg.moe.top_k)
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(frac_tokens * frac_probs)

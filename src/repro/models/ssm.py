@@ -1,0 +1,220 @@
+"""Mamba2 / SSD (state-space duality) block — chunked scan, TPU-friendly.
+
+Follows the minimal-SSD formulation (Dao & Gu 2024, arXiv:2405.21060):
+
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D ⊙ x_t
+
+computed chunk-wise: intra-chunk contributions use a quadratic (attention-like)
+decay matrix on the MXU; inter-chunk state is a short ``lax.scan`` over chunks.
+
+TP note: the input projection is stored as SEPARATE weights (w_z, w_x, w_B,
+w_C, w_dt) rather than one fused in_proj so that the d_inner/head axes shard
+cleanly on the "model" mesh axis with no mid-tensor section boundaries
+(DESIGN.md §5). It also makes the within-head permutation invariance
+(InvarExplore-for-SSM) a pure gather.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode_step", "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    g, n = s.n_groups, s.d_state
+    conv_dim = di + 2 * g * n
+    return di, h, g, n, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    di, h, g, n, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    sd = d ** -0.5
+    dt = jnp.exp(jax.random.uniform(ks[0], (h,)) * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "w_z": jax.random.normal(ks[1], (d, di), dtype) * sd,
+        "w_x": jax.random.normal(ks[2], (d, di), dtype) * sd,
+        "w_B": jax.random.normal(ks[3], (d, g * n), dtype) * sd,
+        "w_C": jax.random.normal(ks[4], (d, g * n), dtype) * sd,
+        "w_dt": jax.random.normal(ks[5], (d, h), dtype) * sd,
+        "conv_x": jax.random.normal(ks[6], (s.conv_width, di), dtype) * s.conv_width ** -0.5,
+        "conv_B": jax.random.normal(ks[7], (s.conv_width, g * n), dtype) * s.conv_width ** -0.5,
+        "conv_C": jax.random.normal(ks[0], (s.conv_width, g * n), dtype) * s.conv_width ** -0.5,
+        "conv_b_x": jnp.zeros((di,), dtype),
+        "conv_b_B": jnp.zeros((g * n,), dtype),
+        "conv_b_C": jnp.zeros((g * n,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (h,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    L = x.shape[1]
+    out = sum(xp[:, i:i + L] * w[i] for i in range(W))
+    return out + b
+
+
+def _ssd_chunked(xh, a, Bm, Cm, chunk, unroll: bool = False):
+    """xh: (B,L,H,P) = dt*x; a: (B,L,H) = A*dt; Bm/Cm: (B,L,G,N).
+
+    Returns y: (B,L,H,P) and final state (B,H,P,N).
+    """
+    B_, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // Q
+
+    def chunked(t, extra):  # (B, Lp, ...) -> (B, nc, Q, ...)
+        return t.reshape((B_, nc, Q) + extra)
+
+    xh_c = chunked(xh, (H, P)).astype(jnp.float32)
+    a_c = chunked(a, (H,)).astype(jnp.float32)
+    # broadcast groups to heads: (B,nc,Q,G,N) -> (B,nc,Q,H,N)
+    Bh = jnp.repeat(chunked(Bm, (G, N)), rep, axis=3).astype(jnp.float32)
+    Ch = jnp.repeat(chunked(Cm, (G, N)), rep, axis=3).astype(jnp.float32)
+
+    cum = jnp.cumsum(a_c, axis=2)                      # (B,nc,Q,H)
+    # intra-chunk decay matrix: dec[i,j] = exp(cum_i - cum_j), i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # y_diag[i] = sum_{j<=i} (C_i·B_j) dec[i,j] u_j
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", Ch, Bh)
+    y_diag = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", cb, dec, xh_c)
+
+    # chunk-final states: S_c = sum_j exp(cum_last - cum_j) B_j ⊗ u_j
+    dec_s = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,H)
+    S_c = jnp.einsum("bckhn,bckh,bckhp->bchpn", Bh, dec_s, xh_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,nc,H)
+
+    def body(h_prev, xs):
+        s_c, d_c = xs                                   # (B,H,P,N), (B,H)
+        h_new = h_prev * d_c[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    s_seq = jnp.moveaxis(S_c, 1, 0)                     # (nc,B,H,P,N)
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)             # (nc,B,H)
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(body, h0, (s_seq, d_seq), unroll=unroll)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_off[i] = exp(cum_i) * C_i · h_prev
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, h_prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B_, Lp, H, P)[:, :L]
+    return y, h_final
+
+
+def _project(p, cfg: ModelConfig, x):
+    """x: (B,L,D) -> z (B,L,di), x/B/C (pre-conv), dt (B,L,H)."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bs = x @ p["w_B"]
+    Cs = x @ p["w_C"]
+    dt = x @ p["w_dt"]
+    return z, xs, Bs, Cs, dt
+
+
+def ssm_forward(p, cfg: ModelConfig, x, return_state=False):
+    """Full-sequence Mamba2 block body (no residual). x: (B, L, D)."""
+    s = cfg.ssm
+    di, h, g, n, conv_dim = _dims(cfg)
+    B_, L, _ = x.shape
+    z, xs, Bs, Cs, dt = _project(p, cfg, x)
+    xs_post = jax.nn.silu(_causal_conv(xs, p["conv_x"], p["conv_b_x"]))
+    Bs_post = jax.nn.silu(_causal_conv(Bs, p["conv_B"], p["conv_b_B"]))
+    Cs_post = jax.nn.silu(_causal_conv(Cs, p["conv_C"], p["conv_b_C"]))
+    xi = xs_post.reshape(B_, L, h, s.head_dim)
+    Bm = Bs_post.reshape(B_, L, g, n)
+    Cm = Cs_post.reshape(B_, L, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    y, final_state = _ssd_chunked(xi * dt[..., None], dt * A[None, None, :], Bm, Cm, s.chunk,
+                                  unroll=cfg.unroll_inner)
+    y = y + xi.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, L, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_state = {
+            "x": xs[:, -(s.conv_width - 1):, :],
+            "B": Bs[:, -(s.conv_width - 1):, :],
+            "C": Cs[:, -(s.conv_width - 1):, :],
+        }
+        return out, {"state": final_state, "conv": conv_state}
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    di, h, g, n, conv_dim = _dims(cfg)
+    w = s.conv_width - 1
+    return {
+        "state": jnp.zeros((batch, h, s.head_dim, n), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, w, di), dtype),
+            "B": jnp.zeros((batch, w, g * n), dtype),
+            "C": jnp.zeros((batch, w, g * n), dtype),
+        },
+    }
+
+
+def _conv_step(win_prev, new, w, b):
+    """Single-position depthwise conv using the cached window."""
+    win = jnp.concatenate([win_prev, new[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.sum(win * w[None], axis=1) + b
+    return out, win[:, 1:]
+
+
+def ssm_decode_step(p, cfg: ModelConfig, x, state):
+    """Single-token decode. x: (B, 1, D); state from init_ssm_state."""
+    s = cfg.ssm
+    di, h, g, n, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    z, xs, Bs, Cs, dt = _project(p, cfg, x[:, 0:1])
+    xs, Bs, Cs, dt, z = xs[:, 0], Bs[:, 0], Cs[:, 0], dt[:, 0], z[:, 0]
+    xo, new_cx = _conv_step(state["conv"]["x"], xs, p["conv_x"], p["conv_b_x"])
+    Bo, new_cb = _conv_step(state["conv"]["B"], Bs, p["conv_B"], p["conv_b_B"])
+    Co, new_cc = _conv_step(state["conv"]["C"], Cs, p["conv_C"], p["conv_b_C"])
+    xi = jax.nn.silu(xo).reshape(B_, h, s.head_dim)
+    Bm = jax.nn.silu(Bo).reshape(B_, g, n)
+    Cm = jax.nn.silu(Co).reshape(B_, g, n)
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                           # (B,H)
+    u = xi.astype(jnp.float32) * dt[..., None]              # (B,H,P)
+    new_state = state["state"] * dA[:, :, None, None] + jnp.einsum("bhn,bhp->bhpn", Bh, u)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state) + xi.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"state": new_state,
+                 "conv": {"x": new_cx, "B": new_cb, "C": new_cc}}

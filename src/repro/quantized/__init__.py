@@ -1,0 +1,3 @@
+from repro.quantized.qmodel import pack_model, packed_bytes, dense_bytes
+
+__all__ = ["pack_model", "packed_bytes", "dense_bytes"]

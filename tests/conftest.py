@@ -1,0 +1,49 @@
+import os
+import sys
+
+# Tests see the REAL device count (1 CPU) — the 512-device override is
+# dryrun.py-local by design (assignment spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """Small OPT-family config (the paper's model family) for PTQ tests."""
+    from repro.configs import get_config
+    return get_config("opt-tiny").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=256, n_heads=4,
+        n_kv_heads=4, max_seq_len=256)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(rng_key, tiny_cfg):
+    from repro.models import init_params
+    return init_params(rng_key, tiny_cfg)
+
+
+@pytest.fixture(scope="session")
+def trained_tiny(tiny_cfg):
+    """A tiny OPT actually trained on the synthetic corpus (session-cached) —
+    quantization must visibly hurt it, and InvarExplore must visibly help."""
+    from repro.launch.train import train
+    params, losses, cfg = train(steps=120, batch=8, seq=128, lr=1e-3,
+                                reduced=True, cfg=tiny_cfg, log_every=1000)
+    assert losses[-1] < losses[0] - 0.5, "training must reduce loss"
+    return params, cfg
+
+
+@pytest.fixture(scope="session")
+def calib(tiny_cfg):
+    from repro.data.calib import calibration_tokens
+    import jax.numpy as jnp
+    return jnp.asarray(calibration_tokens(tiny_cfg.vocab_size, n_seqs=4, seq_len=128))

@@ -1,0 +1,154 @@
+"""Invariance transforms: the paper's §3.2 equations, verified numerically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.invariance import (FFNTransform, identity_transform,
+                                   apply_transform_ffn, propose, ProposalConfig)
+
+
+def _ffn(x, wu, wd, bu=None, wg=None, act=jax.nn.relu):
+    up = x @ wu + (bu if bu is not None else 0.0)
+    h = act(x @ wg) * up if wg is not None else act(up)
+    return h @ wd
+
+
+def _rand_ffn(key, D=24, F=32, bias=True, gate=False):
+    ks = jax.random.split(key, 5)
+    wu = jax.random.normal(ks[0], (D, F))
+    wd = jax.random.normal(ks[1], (F, D))
+    bu = jax.random.normal(ks[2], (F,)) if bias else None
+    wg = jax.random.normal(ks[3], (D, F)) if gate else None
+    x = jax.random.normal(ks[4], (6, D))
+    return x, wu, wd, bu, wg
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_permutation_scaling_exact_relu(seed):
+    """Eqns 8-15: P and S leave a ReLU FFN exactly invariant."""
+    key = jax.random.PRNGKey(seed)
+    x, wu, wd, bu, _ = _rand_ffn(key)
+    F = wu.shape[1]
+    k1, k2 = jax.random.split(key)
+    t = FFNTransform(pi=jax.random.permutation(k1, F).astype(jnp.int32),
+                     s=jnp.exp(jax.random.normal(k2, (F,)) * 0.5),
+                     phi=jnp.zeros((F // 2,)))
+    u, d, b, _, _ = apply_transform_ffn(t, wu, wd, bu)
+    np.testing.assert_allclose(np.asarray(_ffn(x, u, d, b)),
+                               np.asarray(_ffn(x, wu, wd, bu)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rotation_exact_for_linear_activation():
+    """Rotation IS exact when f is the identity (Eqn 16 equality case)."""
+    key = jax.random.PRNGKey(0)
+    x, wu, wd, bu, _ = _rand_ffn(key)
+    F = wu.shape[1]
+    t = FFNTransform(pi=jnp.arange(F, dtype=jnp.int32), s=jnp.ones((F,)),
+                     phi=jax.random.normal(key, (F // 2,)) * 2.0)
+    u, d, b, _, _ = apply_transform_ffn(t, wu, wd, bu)
+    ident = lambda v: v
+    np.testing.assert_allclose(np.asarray(_ffn(x, u, d, b, act=ident)),
+                               np.asarray(_ffn(x, wu, wd, bu, act=ident)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_small_rotation_approx_relu():
+    """Paper pilot: tiny rotations change the ReLU model output negligibly."""
+    key = jax.random.PRNGKey(1)
+    x, wu, wd, bu, _ = _rand_ffn(key)
+    F = wu.shape[1]
+    t = FFNTransform(pi=jnp.arange(F, dtype=jnp.int32), s=jnp.ones((F,)),
+                     phi=jax.random.normal(key, (F // 2,)) * 1e-5)
+    u, d, b, _, _ = apply_transform_ffn(t, wu, wd, bu)
+    z0 = _ffn(x, wu, wd, bu)
+    rel = float(jnp.max(jnp.abs(_ffn(x, u, d, b) - z0)) / (jnp.max(jnp.abs(z0)) + 1e-9))
+    assert rel < 1e-4
+
+
+def test_gated_mlp_permutation_scaling_exact():
+    """SwiGLU: same pi on gate+up+down, S on the linear up-branch — exact."""
+    key = jax.random.PRNGKey(2)
+    x, wu, wd, _, wg = _rand_ffn(key, bias=False, gate=True)
+    F = wu.shape[1]
+    k1, k2 = jax.random.split(key)
+    t = FFNTransform(pi=jax.random.permutation(k1, F).astype(jnp.int32),
+                     s=jnp.exp(jax.random.normal(k2, (F,)) * 0.4),
+                     phi=jnp.zeros((F // 2,)))
+    u, d, _, g, _ = apply_transform_ffn(t, wu, wd, None, wg)
+    np.testing.assert_allclose(
+        np.asarray(_ffn(x, u, d, wg=g, act=jax.nn.silu)),
+        np.asarray(_ffn(x, wu, wd, wg=wg, act=jax.nn.silu)),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_combined_psr_composition_order():
+    """Eqns 21-22: the combined transform telescopes for identity activation."""
+    key = jax.random.PRNGKey(3)
+    x, wu, wd, bu, _ = _rand_ffn(key)
+    F = wu.shape[1]
+    ks = jax.random.split(key, 3)
+    t = FFNTransform(pi=jax.random.permutation(ks[0], F).astype(jnp.int32),
+                     s=jnp.exp(jax.random.normal(ks[1], (F,)) * 0.3),
+                     phi=jax.random.normal(ks[2], (F // 2,)))
+    u, d, b, _, _ = apply_transform_ffn(t, wu, wd, bu)
+    ident = lambda v: v
+    np.testing.assert_allclose(np.asarray(_ffn(x, u, d, b, act=ident)),
+                               np.asarray(_ffn(x, wu, wd, bu, act=ident)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_proposal_keeps_permutation_valid(seed):
+    key = jax.random.PRNGKey(seed)
+    t = identity_transform(64)
+    pcfg = ProposalConfig()
+    for i in range(3):
+        key, sub = jax.random.split(key)
+        t = propose(sub, t, pcfg)
+    pi = np.asarray(t.pi)
+    assert sorted(pi.tolist()) == list(range(64)), "pi must stay a permutation"
+    assert bool(np.all(np.asarray(t.s) > 0)), "scales must stay positive"
+
+
+def test_proposal_moves_are_partial():
+    """~10% of neurons move per step (the paper's step-size mechanism)."""
+    key = jax.random.PRNGKey(0)
+    t = propose(key, identity_transform(100), ProposalConfig(subset_frac=0.1))
+    moved = int(np.sum(np.asarray(t.pi) != np.arange(100)))
+    assert 0 < moved <= 20
+    assert int(np.sum(np.asarray(t.s) != 1.0)) <= 20
+
+
+def test_mamba_within_head_permutation_exact():
+    """Beyond-paper: Mamba2 within-head channel permutation is exact
+    (DESIGN.md §Arch-applicability)."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.models.ssm import ssm_forward
+    from repro.core.search import MambaAdapter
+    from repro.core.invariance import FFNTransform
+
+    cfg = get_config("mamba2-2.7b").reduced(n_layers=1, d_model=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    adapter = MambaAdapter(cfg)
+    base = adapter.base_stack(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    p0 = {k: v[0] for k, v in params["blocks"]["ssm"].items()}
+    y0 = ssm_forward(p0, cfg, x)
+
+    t = FFNTransform(pi=jnp.arange(adapter.di, dtype=jnp.int32),
+                     s=jnp.ones((adapter.di,)), phi=jnp.zeros((adapter.di // 2,)))
+    key = jax.random.PRNGKey(2)
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        t = adapter.propose(sub, t, ProposalConfig(subset_frac=0.5))
+    assert int(np.sum(np.asarray(t.pi) != np.arange(adapter.di))) > 0
+    unit = adapter.transform_unit(base, t, 0)
+    p1 = {**p0, **unit}
+    y1 = ssm_forward(p1, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4, atol=2e-4)

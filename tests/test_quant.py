@@ -1,0 +1,116 @@
+"""Quantization substrate: roundtrip bounds, packing, QTensor, hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QuantConfig, compute_qparams, quantize_codes,
+                              dequantize_codes, fake_quant, pack_codes,
+                              unpack_codes, quantize_tensor, bits_per_param,
+                              vals_per_word)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("group", [32, 64])
+def test_roundtrip_error_bound(bits, group):
+    """|fq(w) - w| <= scale/2 + eps per element (the defining property)."""
+    key = jax.random.PRNGKey(bits * 100 + group)
+    w = jax.random.normal(key, (128, 16)) * 3.0
+    cfg = QuantConfig(bits=bits, group_size=group)
+    scale, zero = compute_qparams(w, cfg)
+    fq = fake_quant(w, cfg)
+    bound = jnp.repeat(scale, group, axis=0) * 0.5 + 1e-5
+    assert bool(jnp.all(jnp.abs(fq - w) <= bound)), "roundtrip exceeded scale/2"
+
+
+def test_extremes_are_exact():
+    """Group max and min map (near-)exactly (asymmetric quant covers range)."""
+    w = jnp.array([[-1.0], [0.5], [3.0], [-2.0]] * 8)  # (32,1)
+    cfg = QuantConfig(bits=2, group_size=32)
+    fq = fake_quant(w, cfg)
+    scale, _ = compute_qparams(w, cfg)
+    assert abs(float(fq.max()) - 3.0) <= float(scale[0, 0]) * 0.5 + 1e-6
+    assert abs(float(fq.min()) + 2.0) <= float(scale[0, 0]) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+def test_pack_unpack_roundtrip(bits):
+    key = jax.random.PRNGKey(bits)
+    vpw = vals_per_word(bits)
+    K = vpw * 6
+    codes = jax.random.randint(key, (K, 8), 0, 2 ** bits, dtype=jnp.int32)
+    packed = pack_codes(codes, bits)
+    assert packed.dtype == jnp.uint32 and packed.shape == (K // vpw, 8)
+    out = unpack_codes(packed, bits, K)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@pytest.mark.parametrize("bits,group", [(2, 32), (3, 32), (4, 64), (8, 64)])
+def test_qtensor_matches_fake_quant(bits, group):
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (128, 32))
+    cfg = QuantConfig(bits=bits, group_size=group)
+    qt = quantize_tensor(w, cfg)
+    np.testing.assert_allclose(np.asarray(qt.dequantize()),
+                               np.asarray(fake_quant(w, cfg)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_qtensor_stacked_scan_slice():
+    """Stacked QTensor slices correctly under lax.scan (model serving path)."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (4, 64, 32))  # (L, K, N)
+    cfg = QuantConfig(bits=2, group_size=32)
+    qt = quantize_tensor(w, cfg)
+    assert qt.packed.shape[0] == 4 and qt.shape == (64, 32)
+
+    def body(c, qt_l):
+        return c + jnp.sum(qt_l.dequantize()), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), qt)
+    expect = float(jnp.sum(qt.dequantize()))
+    assert abs(float(total) - expect) < 1e-2
+
+
+def test_stacked_fake_quant_equals_per_slice():
+    key = jax.random.PRNGKey(11)
+    w = jax.random.normal(key, (3, 64, 16))
+    cfg = QuantConfig(bits=4, group_size=32)
+    stacked = fake_quant(w, cfg)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(stacked[i]),
+                                   np.asarray(fake_quant(w[i], cfg)), rtol=1e-6)
+
+
+def test_bits_per_param_matches_paper():
+    # paper Table 3: 2-bit g128 -> 2.125 (code bits + fp16 scale only)
+    assert abs(bits_per_param(QuantConfig(bits=2, group_size=128),
+                              scale_bits=16, zero_bits=0) - 2.125) < 1e-9
+    assert abs(bits_per_param(QuantConfig(bits=2, group_size=64),
+                              scale_bits=16, zero_bits=0) - 2.25) < 1e-9
+    assert abs(bits_per_param(QuantConfig(bits=3, group_size=128),
+                              scale_bits=16, zero_bits=0) - (3.2 + 0.125)) < 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.sampled_from([16, 32, 64]), st.floats(0.1, 50.0))
+def test_hypothesis_roundtrip_monotone_in_bits(seed, group, spread):
+    """More bits never increases the roundtrip error (system invariant)."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (64, 8)) * spread
+    errs = []
+    for bits in (2, 4, 8):
+        fq = fake_quant(w, QuantConfig(bits=bits, group_size=group))
+        errs.append(float(jnp.mean(jnp.abs(fq - w))))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+def test_constant_group_degenerate_is_finite():
+    """A zero-range group cannot be represented exactly under a CLIPPED
+    integer zero-point (industry-standard behaviour); it must still be finite
+    and bounded by |c|."""
+    w = jnp.full((64, 4), 1.234)
+    fq = fake_quant(w, QuantConfig(bits=2, group_size=32))
+    assert bool(jnp.all(jnp.isfinite(fq)))
+    assert float(jnp.max(jnp.abs(fq - w))) <= 1.234 + 1e-6

@@ -1,0 +1,57 @@
+"""Roofline analyzer logic: HLO collective parsing + extrapolation math."""
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (collective_bytes, extrapolate, roofline_terms,
+                                   _type_bytes, HW)
+
+HLO_SAMPLE = """
+HloModule jit_step
+%fused (p: bf16[128,256]) -> bf16[128,256] { ... }
+%ar = bf16[2048,8192]{1,0} all-reduce(bf16[2048,8192]{1,0} %x), replica_groups={...}
+%ag = f32[512,1024]{1,0} all-gather(f32[32,1024]{1,0} %y), dimensions={0}
+%rs = f32[64,128]{1,0} reduce-scatter(f32[1024,128]{1,0} %z), dimensions={0}
+%cp = bf16[16,16]{1,0} collective-permute(bf16[16,16]{1,0} %w)
+%ars = bf16[4,4]{1,0} all-reduce-start(bf16[4,4]{1,0} %v)
+%ard = bf16[4,4]{1,0} all-reduce-done(bf16[4,4]{1,0} %ars)
+%a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(f32[8,8]{1,0} %p, f32[8,8]{1,0} %q)
+"""
+
+
+def test_type_bytes():
+    assert _type_bytes("bf16[2048,8192]{1,0}") == 2048 * 8192 * 2
+    assert _type_bytes("f32[512,1024]") == 512 * 1024 * 4
+    assert _type_bytes("(f32[8,8], bf16[4])") == 8 * 8 * 4 + 4 * 2
+
+
+def test_collective_bytes_parsing():
+    got = collective_bytes(HLO_SAMPLE)
+    assert got["all-reduce"] == 2048 * 8192 * 2 + 4 * 4 * 2  # incl. -start, not -done
+    assert got["all-gather"] == 512 * 1024 * 4
+    assert got["reduce-scatter"] == 1024 * 128 * 4            # max(result, operand)
+    assert got["collective-permute"] == 16 * 16 * 2
+    assert got["all-to-all"] == 2 * 8 * 8 * 4
+
+
+def test_extrapolation_exact_for_linear():
+    # cost(L) = 7 + 3L  ->  extrapolating from L=2,3 to 24 must be exact
+    f = lambda L: 7 + 3 * L
+    assert extrapolate(f(2), f(3), 2, 3, 24) == pytest.approx(f(24))
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops_dev=197e12, bytes_dev=819e9 * 2, coll_dev=50e9 * 0.5)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(0.5)
+    assert t["dominant"] == "memory_s"
+    assert t["overlap_fraction"] == pytest.approx(2.0 / 3.5)
+
+
+def test_model_flops_conventions():
+    from repro.launch.roofline import model_flops
+    from repro.configs import get_config
+    cfg = get_config("yi-6b")
+    n = cfg.active_param_count()
+    assert model_flops(cfg, 1000, train=True) == pytest.approx(6.0 * n * 1000)
+    assert model_flops(cfg, 1000, train=False) == pytest.approx(2.0 * n * 1000)

@@ -1,0 +1,139 @@
+"""Sharding rules logic (mesh mocked — the real 512-device partitioning is
+exercised by launch/dryrun.py, which is itself validated in CI via one cell)."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.quant import QuantConfig, quantize_tensor
+from repro.dist.sharding import ShardingRules, param_specs, opt_state_specs, cache_specs, data_spec
+from repro.launch.steps import param_structs, qparam_structs, input_specs, SHAPES, shape_applicable
+
+
+def _mock_mesh(shape=((("data", 16), ("model", 16)))):
+    m = types.SimpleNamespace()
+    m.shape = dict(shape)
+    m.axis_names = tuple(k for k, _ in shape)
+    return m
+
+
+def _rules(arch, **kw):
+    cfg = get_config(arch)
+    return ShardingRules(_mock_mesh(), cfg, **kw), cfg
+
+
+def _leaves_with_path(tree):
+    out = []
+
+    def walk(t, path):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, path + (k,))
+        elif isinstance(t, (tuple, list)) and not isinstance(t, P):
+            for i, v in enumerate(t):
+                walk(v, path + (i,))
+        else:
+            out.append((path, t))
+
+    walk(tree, ())
+    return out
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "qwen3-4b", "phi3.5-moe-42b-a6.6b",
+                                  "mamba2-2.7b", "zamba2-7b", "seamless-m4t-medium",
+                                  "internvl2-1b", "moonshot-v1-16b-a3b"])
+def test_param_specs_rank_and_divisibility(arch):
+    rules, cfg = _rules(arch)
+    structs = param_structs(cfg)
+    specs = param_specs(rules, structs)
+    flat_s = dict(_leaves_with_path(specs))
+    flat_p = dict(_leaves_with_path(structs))
+    assert set(flat_s) == set(flat_p)
+    for path, spec in flat_s.items():
+        leaf = flat_p[path]
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, f"{path}: spec longer than rank"
+        for ax, dim in zip(spec, leaf.shape):
+            if ax == "model":
+                assert dim % 16 == 0, f"{path}: dim {dim} not divisible by model=16"
+
+
+def test_internvl2_attention_replicated():
+    """14 heads don't divide 16 -> attention weights must replicate."""
+    rules, cfg = _rules("internvl2-1b")
+    structs = param_structs(cfg)
+    specs = param_specs(rules, structs)
+    wq_spec = specs["blocks"]["attn"]["wq"]
+    assert "model" not in tuple(wq_spec)
+    up_spec = specs["blocks"]["mlp"]["up"]
+    assert tuple(up_spec)[-1] == "model"  # 4864 % 16 == 0
+
+
+def test_moe_experts_on_model_axis():
+    rules, cfg = _rules("phi3.5-moe-42b-a6.6b")
+    specs = param_specs(rules, param_structs(cfg))
+    up = specs["blocks"]["moe"]["up"]   # (L, E, D, F)
+    assert tuple(up) == (None, "model", None, None)
+
+
+def test_zero1_shards_a_free_axis():
+    rules, cfg = _rules("yi-6b", zero1=True)
+    structs = param_structs(cfg)
+    ospecs = opt_state_specs(rules, structs)
+    m_up = ospecs["m"]["blocks"]["mlp"]["up"]    # (L, D, F): F on model, L or D free
+    assert "data" in tuple(m_up)
+
+
+def test_qtensor_component_specs():
+    rules, cfg = _rules("qwen3-4b")
+    qstructs = qparam_structs(cfg, QuantConfig(bits=2, group_size=128))
+    specs = param_specs(rules, qstructs)
+    down = specs["blocks"]["mlp"]["down"]
+    # packed K-axis rows: 9728/16=608 % 16 == 0 -> sharded
+    assert tuple(down.packed)[-2] == "model"
+    # scale rows: 9728/128=76, 76 % 16 != 0 -> replicated fallback
+    assert tuple(down.scale)[-2] is None
+
+
+def test_cache_specs_batch_vs_seq_sharding():
+    rules, cfg = _rules("yi-6b")
+    # decode_32k: batch 128 divisible by 16 -> batch sharded
+    c = cache_specs(rules, cfg, 128)
+    assert tuple(c["k"])[1] in ("data", ("data",))
+    # long_500k: batch 1 -> sequence sharded over dp
+    c1 = cache_specs(rules, cfg, 1)
+    assert tuple(c1["k"])[2] in ("data", ("data",))
+    assert tuple(c1["k"])[1] is None
+
+
+def test_data_spec_fallback():
+    rules, cfg = _rules("yi-6b")
+    first = tuple(data_spec(rules, 256))[0]
+    assert first in ("data", ("data",))  # PartitionSpec may normalize 1-tuples
+    assert tuple(data_spec(rules, 3))[0] is None  # unshardable batch replicates
+
+
+def test_shape_applicability_matrix():
+    """40 assigned cells; long_500k only for SSM/hybrid (DESIGN.md)."""
+    from repro.configs import list_archs
+    total, runnable = 0, 0
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            total += 1
+            runnable += bool(shape_applicable(cfg, shape))
+    assert total == 40
+    assert runnable == 32  # 8 full-attention archs skip long_500k
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "mamba2-2.7b", "seamless-m4t-medium"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_input_specs_are_structs(arch, shape):
+    cfg = get_config(arch)
+    kind, structs = input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(structs):
+        assert isinstance(leaf, (jax.ShapeDtypeStruct,)) or hasattr(leaf, "shape")
