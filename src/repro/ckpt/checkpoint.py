@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core.quant import QTensor
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step", "list_steps"]
 
 _SEP = "/"
 
@@ -133,12 +134,17 @@ def restore_checkpoint(directory, step: Optional[int] = None, *, host_id: int = 
     return _unflatten(flat), manifest
 
 
-def latest_step(directory) -> Optional[int]:
+def list_steps(directory) -> list:
+    """Steps with a published manifest, ascending (partial saves excluded)."""
     base = pathlib.Path(directory)
     if not base.exists():
-        return None
-    steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
-                   if (p / "manifest.json").exists())
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
+                  if (p / "manifest.json").exists())
+
+
+def latest_step(directory) -> Optional[int]:
+    steps = list_steps(directory)
     return steps[-1] if steps else None
 
 

@@ -1,0 +1,28 @@
+"""Distributed substrate: sharding rules, fault tolerance, compressed
+collectives, and sequence-sharded decode attention.
+
+Layout:
+    compat.py      — jax version shims (shard_map location / kwarg drift)
+    sharding.py    — PartitionSpec trees over the ("data", "model") mesh
+    fault.py       — straggler watchdog + checkpoint-restore resilient loop
+    collectives.py — group-quantized (compressed) all-reduce
+    attention.py   — log-sum-exp partial-softmax merge for sharded KV decode
+
+Everything here is mesh-shape driven and divisibility-aware: a dim that does
+not divide its mesh axis falls back to replication instead of failing, so the
+same rules serve every assigned architecture (14-head internvl2 included).
+"""
+from repro.dist.sharding import (ShardingRules, param_specs, opt_state_specs,
+                                 cache_specs, data_spec, to_shardings)
+from repro.dist.fault import StepWatchdog, run_resilient, remesh_restore
+from repro.dist.collectives import compressed_psum
+from repro.dist.attention import (partial_decode_attention, merge_partials,
+                                  sharded_decode_attention)
+
+__all__ = [
+    "ShardingRules", "param_specs", "opt_state_specs", "cache_specs",
+    "data_spec", "to_shardings",
+    "StepWatchdog", "run_resilient", "remesh_restore",
+    "compressed_psum",
+    "partial_decode_attention", "merge_partials", "sharded_decode_attention",
+]

@@ -1,0 +1,59 @@
+"""Compressed collectives: group-quantized all-reduce.
+
+Gradient all-reduce is bandwidth-bound on the DCN hop of the multi-pod mesh;
+``compressed_psum`` cuts the wire bytes ~4x (8-bit codes vs f32) by reusing
+the paper's group-quantization codecs from ``core/quant.py``: each shard
+quantizes its local contribution, the PACKED codes + per-group scales are
+all-gathered (that is the only cross-device traffic), and every shard
+dequantizes and sums locally.
+
+Error bound: each shard contributes at most scale/2 per element of rounding
+error, so the sum over N shards is within N * max(scale)/2 of the exact psum
+(``tests/test_substrate.py::test_compression_error_bound_simulated_shards``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (QuantConfig, compute_qparams, dequantize_codes,
+                              pack_codes, quantize_codes, unpack_codes,
+                              vals_per_word)
+
+__all__ = ["compressed_psum"]
+
+
+def compressed_psum(x, axis_name: str, *, bits: int = 8, group: int = 32):
+    """Group-quantized ``psum`` over ``axis_name`` (shard_map context only).
+
+    x: any-shape float array (flattened internally; groups run along the
+    flattened axis, padded to lcm(group, vals_per_word)). Returns the
+    all-reduced array in ``x``'s shape/dtype, accurate to ~scale/2 per shard
+    per element.
+    """
+    cfg = QuantConfig(bits=bits, group_size=group)
+    vpw = vals_per_word(bits)
+    flat = x.reshape(-1).astype(jnp.float32)
+    unit = group * vpw // math.gcd(group, vpw)  # lcm: pack AND group aligned
+    pad = (-flat.size) % unit
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+
+    # local encode: (K,) -> packed uint32 (K/vpw,), scale/zero (K/group,)
+    scale, zero = compute_qparams(flat, cfg)
+    packed = pack_codes(quantize_codes(flat, scale, zero, cfg), bits)
+
+    # the wire: packed codes + qparams, gathered across the axis
+    g_packed = jax.lax.all_gather(packed, axis_name)   # (n_shards, K/vpw)
+    g_scale = jax.lax.all_gather(scale, axis_name)
+    g_zero = jax.lax.all_gather(zero, axis_name)
+
+    # local decode + reduce
+    def deq(p, s, z):
+        codes = unpack_codes(p, bits, flat.size)
+        return dequantize_codes(codes, s, z, cfg)
+
+    total = jnp.sum(jax.vmap(deq)(g_packed, g_scale, g_zero), axis=0)
+    return total[:x.size].reshape(x.shape).astype(x.dtype)

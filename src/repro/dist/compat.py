@@ -1,0 +1,70 @@
+"""jax version shims.
+
+``shard_map`` has moved twice upstream: it lives at
+``jax.experimental.shard_map.shard_map`` with a ``check_rep=`` kwarg on
+jax <= 0.4.x, and at ``jax.shard_map`` with the kwarg renamed to
+``check_vma=`` on newer releases. Tests and dist code import it from here so
+neither spelling leaks into callers.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # newer jax: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The replication-check kwarg was renamed check_rep -> check_vma.
+_params = inspect.signature(_shard_map).parameters
+_CHECK_KW = "check_vma" if "check_vma" in _params else (
+    "check_rep" if "check_rep" in _params else None)
+
+__all__ = ["shard_map", "make_mesh", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """Version-stable ``Compiled.cost_analysis()``.
+
+    jax 0.4.x returns a one-element list of per-program dicts; newer jax
+    returns the dict directly. Always returns a (possibly empty) dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+    __import__("jax").make_mesh).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """Version-stable ``jax.make_mesh``.
+
+    ``axis_types=`` (and ``jax.sharding.AxisType``) only exist on newer jax;
+    older releases treat every axis as Auto anyway, so the flag is simply
+    dropped there. Pass ``axis_types="auto"`` to request Auto axes without
+    naming the enum (resolved here against the installed jax).
+    """
+    import jax
+
+    if _MAKE_MESH_HAS_AXIS_TYPES and axis_types is not None:
+        if axis_types == "auto":
+            axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None,
+              **kwargs):
+    """Version-stable ``shard_map``.
+
+    Accepts either ``check_vma`` (new spelling) or ``check_rep`` (old
+    spelling) and forwards whichever the installed jax understands; the flag
+    is dropped entirely on a jax that supports neither.
+    """
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -1,0 +1,139 @@
+"""Fault tolerance: straggler detection + checkpoint-restore resilient loop.
+
+``run_resilient`` wraps a deterministic step function: on any step failure it
+restores the latest checkpoint (or the initial state when none landed yet) and
+replays forward. Because the data pipeline is step-indexed and the step
+function is pure in (state, step), replay converges to bit-identical state —
+the property ``tests/test_substrate.py`` pins with an injected step-7 failure.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.ckpt.checkpoint import list_steps
+
+__all__ = ["StepWatchdog", "run_resilient", "remesh_restore"]
+
+
+class StepWatchdog:
+    """Flags straggler steps: a step slower than ``threshold`` x the median of
+    recent healthy steps. Flagged samples are excluded from the baseline so a
+    slow patch cannot drag the median up and mask itself."""
+
+    def __init__(self, threshold: float = 2.0, warmup: int = 5,
+                 window: int = 64):
+        self.threshold = threshold
+        self.warmup = warmup
+        self.window = window
+        self.flagged = 0
+        self._times: list = []
+
+    def observe(self, step_seconds: float) -> bool:
+        """Record one step duration; returns True iff it is a straggler."""
+        is_straggler = False
+        if len(self._times) >= self.warmup:
+            baseline = float(np.median(self._times[-self.window:]))
+            is_straggler = step_seconds > self.threshold * baseline
+        if is_straggler:
+            self.flagged += 1
+        else:
+            self._times.append(step_seconds)
+        return is_straggler
+
+    @property
+    def median_step(self) -> Optional[float]:
+        if not self._times:
+            return None
+        return float(np.median(self._times[-self.window:]))
+
+
+def run_resilient(step_fn: Callable, state, n_steps: int, *, ckpt=None,
+                  save_every: int = 0, start_step: int = 0, watchdog=None,
+                  max_restores: int = 8):
+    """Run ``state = step_fn(state, step)`` for steps [start_step, n_steps),
+    surviving step failures via checkpoint restore.
+
+    ckpt        — a ``CheckpointManager`` (or None: failures re-raise).
+    save_every  — checkpoint whenever the completed-step count hits a multiple
+                  (manifests record the NEXT step to run, so restore resumes
+                  exactly where the save left off).
+    watchdog    — optional ``StepWatchdog``; stragglers are logged as events,
+                  never fatal.
+    max_restores— restart budget; a persistent failure eventually re-raises
+                  instead of looping (replay is only safe for transient
+                  faults).
+
+    Returns (final_state, events) where events is a list of tuples:
+    ("saved", step) / ("failure", step, msg) / ("restored", step) /
+    ("straggler", step, seconds).
+
+    Caveat: with jitted step functions using donated arguments, a failure
+    AFTER donation invalidates ``state``'s buffers — restore-from-checkpoint
+    handles that too (the restored tree is freshly materialized), but the
+    no-checkpoint initial-state fallback assumes the failure preceded
+    donation (true for launch/validation-style faults).
+    """
+    events: list = []
+    initial = state
+    step = start_step
+    restores = 0
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            state = step_fn(state, step)
+            dt = time.perf_counter() - t0
+            if watchdog is not None and watchdog.observe(dt):
+                events.append(("straggler", step, dt))
+            step += 1
+            if ckpt is not None and save_every and step % save_every == 0:
+                ckpt.save(step, state)
+                events.append(("saved", step))
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # noqa: BLE001 — any step fault is recoverable
+            events.append(("failure", step, f"{type(e).__name__}: {e}"))
+            restores += 1
+            if ckpt is None or restores > max_restores:
+                raise
+            state, step = _restore_newest_intact(ckpt, initial, start_step,
+                                                 events)
+            events.append(("restored", step))
+    if ckpt is not None:
+        if save_every and step % save_every != 0:
+            ckpt.save(step, state)  # final state: trailing steps survive restart
+            events.append(("saved", step))
+        ckpt.wait()  # the last async save must land before callers restore
+    return state, events
+
+
+def _restore_newest_intact(ckpt, initial, start_step: int, events: list):
+    """Newest checkpoint that actually restores; corrupt ones are skipped
+    (a failure that also corrupted the latest save must not end recovery).
+    Falls back to the initial state when nothing intact remains."""
+    ckpt.wait()
+    for s in reversed(list_steps(ckpt.dir)):
+        try:
+            state, manifest = ckpt.restore(s)
+            return state, int(manifest["step"])
+        except Exception as e:  # noqa: BLE001 — corrupt shard, keep digging
+            events.append(("corrupt_ckpt", s, f"{type(e).__name__}: {e}"))
+    return initial, start_step
+
+
+def remesh_restore(ckpt, shardings=None, step: Optional[int] = None):
+    """Elastic restore: load the latest (or given) checkpoint and re-shard it
+    onto whatever mesh is now alive.
+
+    ``shardings`` is a tree of ``jax.sharding.Sharding`` matching the state
+    tree (build one with ``dist.sharding.to_shardings``); None keeps the
+    restored single-host placement — the degenerate remesh onto one device.
+    Returns (tree, manifest)."""
+    import jax
+
+    tree, manifest = ckpt.restore(step)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, manifest

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.core.quant import QuantConfig
+from repro.dist import compat
 from repro.dist.sharding import (ShardingRules, param_specs, opt_state_specs,
                                  cache_specs, data_spec, to_shardings)
 from repro.launch.mesh import make_production_mesh
@@ -117,7 +118,7 @@ def _compile_once(cfg: ModelConfig, shape: str, mesh, rules, *, want_text=False,
         lowered = jax.jit(step, in_shardings=in_sh).lower(*structs)
         compiled = lowered.compile()
     dt = time.time() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     ma = compiled.memory_analysis()
     txt = compiled.as_text() if want_text else None
     coll = collective_bytes(compiled.as_text())

@@ -1,0 +1,136 @@
+"""Minimal property-testing fallback for environments without ``hypothesis``.
+
+``tests/conftest.py`` calls :func:`install` only when the real package is
+missing (the dev container bakes jax but not hypothesis, and installing is
+not always possible). CI installs the real hypothesis from
+requirements-dev.txt, so this shim is a fallback, never a replacement.
+
+Implements exactly the surface the test suite uses — ``given``, ``settings``,
+``assume``, and the ``integers`` / ``floats`` / ``sampled_from`` /
+``booleans`` strategies — with deterministic draws seeded per test name, so a
+failure reproduces on re-run.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import sys
+import types
+
+import numpy as np
+
+__all__ = ["install"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def given(*strategies):
+    """Run the test body ``max_examples`` times with deterministic draws.
+
+    The drawn arguments fill the test's TRAILING parameters; the wrapper's
+    signature drops them so pytest does not mistake them for fixtures."""
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if len(params) < len(strategies):
+            raise TypeError(f"{fn.__name__} takes {len(params)} args but "
+                            f"@given supplies {len(strategies)}")
+        kept = params[:len(params) - len(strategies)]
+        seed = int.from_bytes(
+            hashlib.sha256(fn.__qualname__.encode()).digest()[:4], "big")
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_hyp_settings",
+                        {}).get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(seed)
+            ran = 0
+            rejected = 0
+            while ran < n:
+                drawn = [s.example(rng) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except _Unsatisfied:
+                    rejected += 1
+                    if rejected > max(10 * n, 100):  # real hypothesis errors too
+                        raise AssertionError(
+                            f"{fn.__name__}: assume() rejected {rejected} draws"
+                            f" for {ran} accepted — unsatisfiable property")
+                    continue
+                except Exception:
+                    print(f"[hypothesis-fallback] falsifying example for "
+                          f"{fn.__name__}: {drawn!r}", file=sys.stderr)
+                    raise
+                ran += 1
+
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__  # keep pytest off fn's original signature
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (already @given-wrapped) test."""
+    def decorate(fn):
+        fn._mini_hyp_settings = {"max_examples": max_examples}
+        return fn
+    return decorate
+
+
+def install():
+    """Register this shim as ``hypothesis`` / ``hypothesis.strategies``.
+
+    No-op if a ``hypothesis`` module is already importable or installed."""
+    if "hypothesis" in sys.modules:
+        return
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                            filter_too_much="filter_too_much")
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -6,6 +6,12 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401 — prefer the real package when installed
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_fallback
+    hypothesis_fallback.install()
+
 import jax
 import numpy as np
 import pytest

@@ -1,0 +1,57 @@
+"""Import health: every module under ``repro.*`` must import.
+
+A missing module used to cascade into 8 unrelated test errors (the
+``repro.dist`` hole reached test_baselines/test_search/test_system through
+``launch/train.py``); this smoke test makes the breakage fail in exactly one
+obvious place instead.
+"""
+import importlib
+import os
+import pkgutil
+
+import jax
+import pytest
+
+import repro
+
+
+def _all_repro_modules():
+    return sorted(m.name for m in pkgutil.walk_packages(repro.__path__,
+                                                        prefix="repro."))
+
+
+def test_walk_finds_the_package_tree():
+    names = _all_repro_modules()
+    for expected in ("repro.core.quant", "repro.dist.sharding",
+                     "repro.dist.fault", "repro.launch.train",
+                     "repro.launch.dryrun", "repro.models.model"):
+        assert expected in names, f"{expected} missing from package walk"
+
+
+def test_every_repro_module_imports():
+    # Lock the jax backend to the real local devices BEFORE importing
+    # launch.dryrun, which writes XLA_FLAGS (a no-op once the backend exists,
+    # by design — but only once it exists).
+    jax.devices()
+    saved_flags = os.environ.get("XLA_FLAGS")
+    failures = []
+    try:
+        for name in _all_repro_modules():
+            try:
+                importlib.import_module(name)
+            except Exception as e:  # noqa: BLE001 — collect every breakage
+                failures.append(f"{name}: {type(e).__name__}: {e}")
+    finally:
+        # dryrun mutates XLA_FLAGS at import; don't leak that to other tests
+        if saved_flags is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved_flags
+    assert not failures, "unimportable modules:\n  " + "\n  ".join(failures)
+
+
+def test_dist_package_exports_contract_surface():
+    """The API the tests and launchers pin must stay re-exported."""
+    import repro.dist as dist
+    for name in dist.__all__:
+        assert getattr(dist, name, None) is not None, name
