@@ -1,19 +1,35 @@
-"""Kernel microbenchmarks: quant_matmul / group_quant vs their jnp references.
+"""Kernel microbenchmarks: quant_matmul / group_quant / paged_decode vs
+their jnp references.
 
 On this CPU container the Pallas kernels run in interpret mode (slow by
 construction); the numbers that matter here are the REFERENCE-path timings
 and the analytic HBM-traffic derivation for the TPU target printed as
-``derived`` (weight-bytes ratio = the roofline win of the fused kernel).
+``derived`` (weight-bytes ratio = the roofline win of the fused kernel; for
+paged decode, live-page bytes vs the max_len-capacity cache read).
+
+Rows also land in ``artifacts/benchmarks/BENCH_kernels.json`` so CI can
+upload them and a perf trajectory accumulates across commits.
 """
+import json
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import ART, emit, timed
 from repro.core.quant import QuantConfig, quantize_tensor
-from repro.kernels.ref import quant_matmul_ref, group_quant_ref
+from repro.kernels.ref import (group_quant_ref, paged_decode_ref,
+                               quant_matmul_ref)
 
 
 def run():
+    rows = []
+
+    def record(name, us, derived):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
     key = jax.random.PRNGKey(0)
     for (M, K, N, bits, G) in [(8, 2048, 2048, 2, 128), (8, 2048, 2048, 4, 128),
                                (128, 1024, 1024, 2, 64)]:
@@ -26,8 +42,8 @@ def run():
             f(x, qt.packed, qt.scale, qt.zero)), repeat=5)
         dense_bytes = K * N * 2
         packed_bytes = qt.memory_bytes()
-        emit(f"kernel/quant_matmul/{M}x{K}x{N}b{bits}", us,
-             f"weight_hbm_ratio={dense_bytes/packed_bytes:.2f}x")
+        record(f"kernel/quant_matmul/{M}x{K}x{N}b{bits}", us,
+               f"weight_hbm_ratio={dense_bytes/packed_bytes:.2f}x")
 
     for (K, N, bits, G) in [(2048, 2048, 2, 128), (4096, 1024, 4, 64)]:
         w = jax.random.normal(key, (K, N))
@@ -35,7 +51,37 @@ def run():
         jax.block_until_ready(f(w))
         _, us = timed(lambda: jax.block_until_ready(f(w)), repeat=5)
         # fused kernel: 1 read + 1 write vs 4 passes un-fused
-        emit(f"kernel/group_quant/{K}x{N}b{bits}", us, "fused_hbm_passes=2_of_8")
+        record(f"kernel/group_quant/{K}x{N}b{bits}", us, "fused_hbm_passes=2_of_8")
+
+    # paged decode attention: B sequences at ragged depths over a page pool.
+    # ``derived``: CAPACITY ratio — tokens a contiguous (B, max_len) cache
+    # must hold in HBM vs the page-granular live allocation. This is the
+    # paging memory win (more sequences per pool), NOT streamed decode
+    # bytes: the shipped kernel still visits every block-table slot
+    # (masked-page skipping is a ROADMAP item), so read traffic is
+    # capacity-bound either way.
+    for (B, H, Dh, psz, max_pages, fill) in [(8, 8, 64, 16, 16, 0.5),
+                                             (16, 8, 64, 32, 8, 0.25)]:
+        n_pages = B * max_pages + 1
+        kp = jax.random.normal(key, (n_pages, psz, H, Dh))
+        vp = jax.random.normal(key, (n_pages, psz, H, Dh))
+        q = jax.random.normal(key, (B, H, Dh))
+        bt = jnp.asarray(
+            1 + np.arange(B * max_pages).reshape(B, max_pages), jnp.int32)
+        lens = jnp.full((B,), int(max_pages * psz * fill), jnp.int32)
+        f = jax.jit(lambda q, kp, vp, bt, lens: paged_decode_ref(
+            q, kp, vp, bt, lens))
+        jax.block_until_ready(f(q, kp, vp, bt, lens))
+        _, us = timed(lambda: jax.block_until_ready(f(q, kp, vp, bt, lens)),
+                      repeat=5)
+        live_pages = B * -(-int(lens[0]) // psz)  # page-granular allocation
+        cap_pages = B * max_pages
+        record(f"kernel/paged_decode/B{B}xH{H}xD{Dh}p{psz}", us,
+               f"capacity_vs_live_pages={cap_pages/max(live_pages, 1):.2f}x")
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "BENCH_kernels.json").write_text(json.dumps(rows, indent=1))
+    return rows
 
 
 if __name__ == "__main__":

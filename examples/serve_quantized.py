@@ -1,6 +1,6 @@
 """End-to-end serving driver (the paper's deployment scenario): pack a model
-to 2-bit QTensors and serve BATCHED requests through prefill + greedy decode,
-reporting the memory saving and tokens/s.
+to 2-bit QTensors and serve a MIXED-LENGTH request stream through the paged
+KV cache + continuous batcher, reporting the memory split and tokens/s.
 
     PYTHONPATH=src python examples/serve_quantized.py --requests 8
 """
@@ -16,12 +16,13 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.quant import QuantConfig
-from repro.launch.serve import BatchedServer, Request
+from repro.launch.serve import PagedServer, Request
 from repro.models import init_params
-from repro.quantized.qmodel import pack_model, packed_bytes, dense_bytes
+from repro.quantized.qmodel import (pack_model, packed_bytes, dense_bytes,
+                                    serving_memory_report)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt-tiny")
     ap.add_argument("--bits", type=int, default=2)
@@ -29,7 +30,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced(n_layers=4, d_model=128, d_ff=512,
                                         vocab_size=512, n_heads=4, n_kv_heads=4)
@@ -40,7 +43,11 @@ def main():
     print(f"[serve] weights: packed={pb/1e6:.2f} MB vs fp16-dense={db/1e6:.2f} MB "
           f"on quantized leaves ({db/pb:.1f}x)")
 
-    server = BatchedServer(params_q, cfg, batch_size=args.batch, max_len=128)
+    server = PagedServer(params_q, cfg, max_batch=args.batch,
+                         page_size=args.page_size, max_len=args.max_len)
+    rep = serving_memory_report(params_q, server.cache.pools)
+    print(f"[serve] page pool {server.cache.n_pages} x {args.page_size} tokens; "
+          f"kv_fraction={rep['kv_fraction']:.2f} of serving memory")
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=int(rng.integers(4, 16))).astype(np.int32),
@@ -50,8 +57,10 @@ def main():
     dt = time.time() - t0
     n = sum(len(o) for o in outs)
     print(f"[serve] {len(reqs)} requests -> {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    print(f"[serve] batcher stats: {server.batcher.stats}")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i}: prompt_len={len(reqs[i].prompt)} -> {o[:8]}...")
+    return outs
 
 
 if __name__ == "__main__":

@@ -17,7 +17,8 @@ from repro.dist.sharding import (ShardingRules, param_specs, opt_state_specs,
 from repro.dist.fault import StepWatchdog, run_resilient, remesh_restore
 from repro.dist.collectives import compressed_psum
 from repro.dist.attention import (partial_decode_attention, merge_partials,
-                                  sharded_decode_attention)
+                                  sharded_decode_attention,
+                                  sharded_paged_decode_attention)
 
 __all__ = [
     "ShardingRules", "param_specs", "opt_state_specs", "cache_specs",
@@ -25,4 +26,5 @@ __all__ = [
     "StepWatchdog", "run_resilient", "remesh_restore",
     "compressed_psum",
     "partial_decode_attention", "merge_partials", "sharded_decode_attention",
+    "sharded_paged_decode_attention",
 ]

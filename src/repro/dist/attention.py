@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["partial_decode_attention", "merge_partials",
-           "sharded_decode_attention"]
+           "sharded_decode_attention", "sharded_paged_decode_attention"]
 
 _MASKED = -1e30  # matches kernels/ref.py masking (finite: no NaN via inf-inf)
 
@@ -59,6 +59,30 @@ def merge_partials(acc, m, l):
     alpha = jnp.exp(m - m_star[None])           # (N, B, H)
     num = jnp.sum(alpha[..., None] * acc, axis=0)
     den = jnp.sum(alpha * l, axis=0)
+    return num / den[..., None]
+
+
+def sharded_paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                   seq_lens, axis_name, k_scale=None,
+                                   v_scale=None, *, use_pallas=True):
+    """Decode attention over a sequence-sharded PAGED cache (shard_map body).
+
+    Each device owns a page pool holding its slice of every sequence plus
+    the matching per-shard block tables (B, P_local) and LOCAL lengths (B,)
+    — the paged analogue of ``sharded_decode_attention``. The Pallas kernel
+    (``kernels.paged_decode`` with ``normalize=False``) emits the exact
+    (acc, m, l) log-sum-exp partials this merge needs, so paging composes
+    with sequence sharding at the cost of the same two O(B*H*Dh)
+    collectives. Softmax weights depend only on scores, not positions, so
+    local masking per shard merges exactly.
+    """
+    from repro.kernels import paged_decode  # deferred: dist stays importable
+    acc, m, l = paged_decode(q, k_pages, v_pages, block_tables, seq_lens,
+                             k_scale, v_scale, normalize=False,
+                             use_pallas=use_pallas)
+    m_star = jax.lax.pmax(m, axis_name)
+    alpha = jnp.exp(m - m_star)
+    num, den = jax.lax.psum((alpha[..., None] * acc, alpha * l), axis_name)
     return num / den[..., None]
 
 

@@ -4,11 +4,17 @@
   hot loop; cuts weight HBM traffic by the packing factor.
 - ``group_quant``: fused group quant->dequant roundtrip — the discrete
   search's inner primitive (one VMEM pass instead of four HBM passes).
+- ``flash_decode`` / ``paged_decode``: fused one-token decode attention over
+  a contiguous (flash) or block-table-paged (paged) KV cache; the paged
+  variant scalar-prefetches the block table so continuous batching reads
+  only live pages.
 
 Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` wraps them with
 jit + CPU interpret-mode fallback; tests sweep shapes/dtypes against the
 oracles.
 """
-from repro.kernels.ops import quant_matmul, group_quant, flash_decode, on_tpu
+from repro.kernels.ops import (quant_matmul, group_quant, flash_decode,
+                               paged_decode, on_tpu)
 
-__all__ = ["quant_matmul", "group_quant", "flash_decode", "on_tpu"]
+__all__ = ["quant_matmul", "group_quant", "flash_decode", "paged_decode",
+           "on_tpu"]

@@ -15,8 +15,10 @@ from repro.kernels import ref
 from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.group_quant import group_quant_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.paged_decode import paged_decode_pallas
 
-__all__ = ["quant_matmul", "group_quant", "flash_decode", "on_tpu"]
+__all__ = ["quant_matmul", "group_quant", "flash_decode", "paged_decode",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -64,6 +66,25 @@ def flash_decode(q, k, v, k_scale=None, v_scale=None, *, kv_len=None,
         return ref.flash_decode_ref(q, k, v, k_scale, v_scale, kv_len)
     return flash_decode_pallas(q, k, v, k_scale, v_scale, kv_len=kv_len,
                                chunk=chunk, interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "use_pallas"))
+def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, k_scale=None,
+                 v_scale=None, *, normalize: bool = True, use_pallas: bool = True):
+    """Paged one-token decode attention over a block-table page pool.
+
+    The continuous-batching hot path: q (B, H, Dh) attends over the pages
+    named by ``block_tables`` (B, P) in the global (N, page_size, Hkv, Dh)
+    pool, masked to per-sequence ``seq_lens``. ``normalize=False`` returns
+    the (acc, m, l) partials for the cross-shard LSE merge.
+    """
+    if not use_pallas:
+        return ref.paged_decode_ref(q, k_pages, v_pages, block_tables,
+                                    seq_lens, k_scale, v_scale,
+                                    normalize=normalize)
+    return paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
+                               k_scale, v_scale, normalize=normalize,
+                               interpret=not on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group", "use_pallas"))

@@ -1,0 +1,130 @@
+"""Paged single-token decode attention: gather KV pages via a block table.
+
+Continuous batching stores the KV cache as a global pool of fixed-size pages
+(``k_pages``/``v_pages``: (N_pages, page_size, Hkv, Dh)) plus one block table
+per sequence mapping logical page slots to physical page ids. This kernel
+computes one decode token of attention per sequence WITHOUT materialising a
+contiguous per-sequence cache: the block table and sequence lengths are
+scalar-prefetched (SMEM), so each grid step's BlockSpec index map DMAs exactly
+one physical page HBM→VMEM, and the online-softmax state (m, l, acc) stays in
+VMEM across the page axis of the grid — the paged analogue of
+``flash_decode.py``.
+
+    out[b,h] = softmax(q[b,h] · K[pages(b),h%]ᵀ / sqrt(Dh)) · V[pages(b),h%]
+
+GQA is handled inside the index map (query head h reads KV head h // rep), so
+the page pool is never repeated. Pages may be int8 with per-(slot, head)
+absmax scales (the serving cache layout); dequantization happens in-register
+per page. With ``normalize=False`` the kernel returns the raw partial stats
+(acc, m, l) instead of the normalized output — the exact log-sum-exp partials
+``repro.dist.attention.merge_partials`` merges across sequence shards, so a
+sequence-sharded cache can be paged per shard.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_pallas"]
+
+NEG = -1e30
+
+
+def _kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+            o_ref, m_ref, l_ref, *, page_size, quantized, normalize):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)                   # (Dh,)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)               # (page_size, Dh)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        kb = kb * ks_ref[0, :, 0][:, None].astype(jnp.float32)
+        vb = vb * vs_ref[0, :, 0][:, None].astype(jnp.float32)
+
+    dh = q.shape[0]
+    s = (kb @ q) * (dh ** -0.5)                              # (page_size,)
+    pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
+    mask = pos < sl_ref[b]
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    prob = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    o_ref[0, 0, :] = o_ref[0, 0, :] * corr + prob @ vb
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_prev * corr + jnp.sum(prob)
+
+    if normalize:
+        @pl.when(p == pl.num_programs(2) - 1)
+        def _finish():
+            o_ref[0, 0, :] = o_ref[0, 0, :] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+def paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
+                        k_scale=None, v_scale=None, *, normalize: bool = True,
+                        interpret: bool = False):
+    """q: (B, H, Dh); k/v_pages: (N, page_size, Hkv, Dh) f32/bf16 or int8
+    (+ scales (N, page_size, Hkv)); block_tables: (B, P) int32 physical page
+    ids; seq_lens: (B,) int32.
+
+    Block-table entries past a sequence's last used page may be arbitrary
+    VALID page ids (the batcher pads with page 0): those positions are masked
+    by ``seq_lens``. Returns (B, H, Dh) f32, or the unnormalized partial
+    stats (acc (B, H, Dh), m (B, H), l (B, H)) when ``normalize=False``.
+    """
+    B, H, Dh = q.shape
+    n_pages, page_size, Hkv, _ = k_pages.shape
+    P = block_tables.shape[1]
+    rep = H // Hkv
+    quantized = k_scale is not None
+    if not quantized:  # uniform kernel arity, same idiom as flash_decode
+        k_scale = jnp.ones((n_pages, page_size, Hkv), jnp.float32)
+        v_scale = jnp.ones((n_pages, page_size, Hkv), jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, Dh), lambda b, h, p, bt, sl: (b, h, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep, 0)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Dh), lambda b, h, p, bt, sl: (b, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, p, bt, sl: (b, h)),
+            pl.BlockSpec((1, 1), lambda b, h, p, bt, sl: (b, h)),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, quantized=quantized,
+                          normalize=normalize),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages, k_scale, v_scale)
+    if normalize:
+        return out
+    return out, m, l

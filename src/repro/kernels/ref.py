@@ -8,7 +8,7 @@ from repro.core.quant import (QuantConfig, compute_qparams, quantize_codes,
                               dequantize_codes, unpack_codes)
 
 __all__ = ["quant_matmul_ref", "group_quant_ref", "dequant_ref",
-           "flash_decode_ref"]
+           "flash_decode_ref", "paged_decode_ref"]
 
 
 def flash_decode_ref(q, k, v, k_scale=None, v_scale=None, kv_len=None):
@@ -23,6 +23,41 @@ def flash_decode_ref(q, k, v, k_scale=None, v_scale=None, kv_len=None):
     if kv_len is not None:
         mask = jnp.arange(k.shape[1]) < kv_len
         s = jnp.where(mask[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vf)
+
+
+def paged_decode_ref(q, k_pages, v_pages, block_tables, seq_lens,
+                     k_scale=None, v_scale=None, normalize=True):
+    """Dense paged-attention oracle: gather pages, then plain softmax.
+
+    q (B, H, Dh); k/v_pages (N, page_size, Hkv, Dh) [+ scales
+    (N, page_size, Hkv)]; block_tables (B, P) int32; seq_lens (B,) int32.
+    Returns (B, H, Dh), or the (acc, m, l) log-sum-exp partials when
+    ``normalize=False`` (the dist merge contract).
+    """
+    B, H, Dh = q.shape
+    _, page_size, Hkv, _ = k_pages.shape
+    P = block_tables.shape[1]
+    kf = k_pages[block_tables].astype(jnp.float32)     # (B, P, psz, Hkv, Dh)
+    vf = v_pages[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[block_tables][..., None].astype(jnp.float32)
+        vf = vf * v_scale[block_tables][..., None].astype(jnp.float32)
+    kf = kf.reshape(B, P * page_size, Hkv, Dh)
+    vf = vf.reshape(B, P * page_size, Hkv, Dh)
+    if Hkv < H:  # GQA: repeat KV heads to the query head count
+        kf = jnp.repeat(kf, H // Hkv, axis=2)
+        vf = jnp.repeat(vf, H // Hkv, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf) * Dh ** -0.5
+    mask = jnp.arange(P * page_size)[None, :] < seq_lens[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    if not normalize:
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bhs,bshd->bhd", p, vf)
+        return acc, m, l
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhs,bshd->bhd", p, vf)
 

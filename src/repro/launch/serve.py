@@ -1,12 +1,18 @@
-"""Batched serving driver for quantized models.
+"""Serving driver for quantized models: paged KV cache + continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-tiny --bits 2
 
-Request flow: batched prompts -> prefill (builds KV cache) -> greedy decode
-loop with the packed-QTensor weights (dequant-on-the-fly in each scan body;
-on TPU the fused quant_matmul kernel serves the same role at the block level).
-A minimal continuous-batching queue is included: finished sequences are
-replaced by queued requests between decode steps.
+Default flow (``PagedServer``): requests stream through
+``repro.serving.ContinuousBatcher`` — per-request prefill scatters K/V into a
+fixed-size page pool, one jitted decode step advances every live sequence at
+its own depth (attention reads pages through the block-table Pallas kernel),
+finished sequences hand their pages back between steps, and exhaustion
+preempts the newest sequence. Weights stay packed QTensors throughout
+(dequant-on-the-fly in each scan body; the fused quant_matmul kernel on TPU).
+
+``BatchedServer`` (``--legacy``) keeps the old fixed-slot recycling loop for
+comparison: it pads every batch to the longest member and holds max_len-deep
+cache slots whether used or not.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from repro.core.quant import QuantConfig
 from repro.launch.steps import make_serve_step
 from repro.models import init_params, prefill
 from repro.quantized.qmodel import pack_model, packed_bytes, dense_bytes
+from repro.serving import ContinuousBatcher, PagedKVCache, PagedRequest
 
 
 @dataclasses.dataclass
@@ -75,6 +82,34 @@ class BatchedServer:
         return [results[id(r)] for r in requests]
 
 
+class PagedServer:
+    """Continuous-batching server over the paged KV cache.
+
+    ``n_pages`` bounds TOTAL cache memory across all live sequences (the
+    dense server's cost was batch x max_len whether used or not);
+    ``max_pages_per_seq`` bounds a single sequence. Accepts the same
+    ``Request`` objects as ``BatchedServer``.
+    """
+
+    def __init__(self, params_q, cfg, max_batch: int = 4, page_size: int = 16,
+                 n_pages: Optional[int] = None, max_len: int = 512,
+                 use_pallas: bool = True):
+        pages_per_seq = -(-max_len // page_size)
+        if n_pages is None:
+            n_pages = max_batch * pages_per_seq + 1  # +1 null page
+        self.cfg = cfg
+        self.cache = PagedKVCache(cfg, n_pages=n_pages, page_size=page_size,
+                                  max_pages_per_seq=pages_per_seq)
+        self.batcher = ContinuousBatcher(params_q, cfg, self.cache,
+                                         max_batch=max_batch,
+                                         use_pallas=use_pallas)
+
+    def generate(self, requests: List[Request]):
+        paged = [PagedRequest(prompt=np.asarray(r.prompt, np.int32),
+                              max_new=r.max_new) for r in requests]
+        return self.batcher.run(paged)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt-tiny")
@@ -83,6 +118,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="total page-pool size (default: batch x max_len/page)")
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--legacy", action="store_true",
+                    help="fixed-slot BatchedServer instead of the paged path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -94,17 +135,30 @@ def main():
     print(f"[serve] packed={pb/1e6:.2f}MB vs fp16={db/1e6:.2f}MB "
           f"({db/pb:.1f}x smaller)")
 
-    server = BatchedServer(params_q, cfg, batch_size=args.batch)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)).astype(np.int32),
                     max_new=args.max_new)
             for _ in range(args.requests)]
+    if args.legacy:
+        server = BatchedServer(params_q, cfg, batch_size=args.batch,
+                               max_len=args.max_len)
+    else:
+        server = PagedServer(params_q, cfg, max_batch=args.batch,
+                             page_size=args.page_size, n_pages=args.pages,
+                             max_len=args.max_len)
+        pool = server.cache.pool_bytes()
+        dense = server.cache.dense_equiv_bytes(args.batch, args.max_len)
+        print(f"[serve] page pool: {server.cache.n_pages} x "
+              f"{args.page_size}-token pages = {pool/1e6:.2f}MB "
+              f"(contiguous {args.batch}x{args.max_len} cache: {dense/1e6:.2f}MB)")
     t0 = time.time()
     outs = server.generate(reqs)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s)")
+    if not args.legacy:
+        print(f"[serve] batcher stats: {server.batcher.stats}")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i}: {o[:10]}...")
 

@@ -25,8 +25,9 @@ from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_sche
 from repro.quantized.qmodel import pack_model
 
 __all__ = ["SHAPES", "shape_applicable", "make_train_step", "make_serve_step",
-           "make_prefill_step", "input_specs", "param_structs", "opt_structs",
-           "qparam_structs", "cache_structs"]
+           "make_paged_serve_step", "make_prefill_step", "input_specs",
+           "param_structs", "opt_structs", "qparam_structs", "cache_structs",
+           "paged_pool_structs"]
 
 
 SHAPES = {
@@ -111,6 +112,14 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def make_paged_serve_step(cfg: ModelConfig):
+    """(params_q, tokens(B,1), pools, block_tables(B,P), seq_lens(B))
+    -> (next_token(B,1), pools) — the continuous-batching decode step
+    (attention over the block-table page pool, per-sequence positions)."""
+    from repro.serving.decode import make_paged_decode_step
+    return make_paged_decode_step(cfg)
+
+
 def make_prefill_step(cfg: ModelConfig, max_len: int):
     """(params_q, batch) -> (last-token logits, cache)."""
 
@@ -150,6 +159,21 @@ def qparam_structs(cfg: ModelConfig, qcfg: QuantConfig):
 def cache_structs(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(
         functools.partial(M.init_cache, cfg, batch, max_len))
+
+
+def paged_pool_structs(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Page-pool tree as ShapeDtypeStructs (paged serving dry-run inputs).
+
+    Derived from ``PagedKVCache`` itself via eval_shape so the dry-run specs
+    can never drift from the layout the batcher actually allocates.
+    """
+    from repro.serving.paged_cache import PagedKVCache
+
+    def build():
+        return PagedKVCache(cfg, n_pages=n_pages, page_size=page_size,
+                            max_pages_per_seq=1).pools
+
+    return jax.eval_shape(build)
 
 
 def _token_struct(batch, seq):

@@ -188,6 +188,21 @@ def init_attn(key, cfg: ModelConfig, dtype):
     return p
 
 
+def quantize_kv(k, v):
+    """int8 KV quantize-on-write: absmax scale per (..., head) over head_dim.
+
+    The single source of the cache quantization convention — the contiguous
+    cache (``self_attention``) and the paged pool writer
+    (``repro.serving.decode``) must stay bit-identical or their documented
+    tolerances diverge. Returns (k_int8, v_int8, k_scale, v_scale).
+    """
+    ks = jnp.max(jnp.abs(k), axis=-1) / 127.0 + 1e-8
+    vs = jnp.max(jnp.abs(v), axis=-1) / 127.0 + 1e-8
+    kq = jnp.round(k / ks[..., None]).astype(jnp.int8)
+    vq = jnp.round(v / vs[..., None]).astype(jnp.int8)
+    return kq, vq, ks, vs
+
+
 def attn_qkv(p, cfg: ModelConfig, x, positions):
     """Project + rope. Returns q, k, v as (B, S, H, Dh)."""
     B, S, _ = x.shape
@@ -235,11 +250,8 @@ def self_attention(p, cfg: ModelConfig, x, positions, *, causal=True, cache=None
                 buf, val.astype(buf.dtype), cache_index, axis=1)
 
         if cfg.kv_cache_dtype == "int8":
-            # absmax per (B, pos, head) — quantize on write, dequant per chunk
-            ks = jnp.max(jnp.abs(k), axis=-1) / 127.0 + 1e-8
-            vs = jnp.max(jnp.abs(v), axis=-1) / 127.0 + 1e-8
-            kq = jnp.round(k / ks[..., None]).astype(jnp.int8)
-            vq = jnp.round(v / vs[..., None]).astype(jnp.int8)
+            # quantize on write, dequant per chunk at read
+            kq, vq, ks, vs = quantize_kv(k, v)
             new_cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
                          "k_scale": upd(cache["k_scale"], ks),
                          "v_scale": upd(cache["v_scale"], vs)}

@@ -14,7 +14,8 @@ from repro.core.quant import QuantConfig, QTensor, quantize_tensor
 from repro.core.rtn import map_quantizable
 from repro.models.config import ModelConfig
 
-__all__ = ["pack_model", "packed_bytes", "dense_bytes"]
+__all__ = ["pack_model", "packed_bytes", "dense_bytes", "cache_bytes",
+           "serving_memory_report"]
 
 
 def pack_model(params, qcfg: QuantConfig, only=None):
@@ -34,6 +35,26 @@ def packed_bytes(params) -> int:
         else:
             total += leaf.size * leaf.dtype.itemsize
     return total
+
+
+def cache_bytes(cache) -> int:
+    """Total bytes of any KV-cache tree (contiguous cache dict, paged page
+    pools, int8 code + scale layouts alike) — the serving memory term that
+    dominates once weights are ultra-low-bit."""
+    return sum(int(leaf.size * jnp.dtype(leaf.dtype).itemsize)
+               for leaf in jax.tree.leaves(cache))
+
+
+def serving_memory_report(params_q, cache) -> dict:
+    """Weight vs KV-cache memory split for a serving configuration.
+
+    ``kv_fraction`` is the headline number paging attacks: with 2-bit
+    weights the cache is the dominant term, so cache bytes must track live
+    tokens (pages), not allocated capacity.
+    """
+    wb, cb = packed_bytes(params_q), cache_bytes(cache)
+    return {"weight_bytes": wb, "kv_bytes": cb,
+            "kv_fraction": cb / max(wb + cb, 1)}
 
 
 def dense_bytes(params, dtype_bytes: int = 2) -> int:

@@ -1,0 +1,17 @@
+"""Paged KV-cache serving subsystem (continuous batching).
+
+- ``paged_cache``: fixed-size page pool, free-list allocator, block tables
+- ``decode``: jit-able paged decode step (scatter-write + paged attention)
+- ``batcher``: admit / evict / reclaim scheduler between decode steps
+
+The Pallas kernel behind the attention read lives in
+``repro.kernels.paged_decode``; ``launch/serve.py`` wraps this package as the
+serving driver.
+"""
+from repro.serving.paged_cache import PageAllocator, PagedKVCache, NULL_PAGE
+from repro.serving.decode import make_paged_decode_step, paged_attention_block
+from repro.serving.batcher import ContinuousBatcher, PagedRequest
+
+__all__ = ["PageAllocator", "PagedKVCache", "NULL_PAGE",
+           "make_paged_decode_step", "paged_attention_block",
+           "ContinuousBatcher", "PagedRequest"]

@@ -1,0 +1,212 @@
+"""Continuous batching scheduler over the paged KV cache.
+
+The toy server in ``launch/serve.py`` ran fixed batches to completion — a
+batch of mixed-length requests waited for its longest member and its cache
+slots were sized for ``max_len`` regardless of use. The batcher replaces that
+with the production loop:
+
+  admit     between decode steps, free batch slots are filled from the queue:
+            the prompt is prefilled (one sequence, right-padded to a page
+            multiple so jit shapes bucket), its K/V scattered into freshly
+            allocated pages, and the slot joins the running batch.
+  step      ONE jitted decode step advances every live slot at once (each at
+            its own depth — positions and lengths are per-sequence).
+  reclaim   finished sequences return their pages to the free list and their
+            slot to the admit pool immediately; nobody waits for a batch.
+  evict     if a slot's next token needs a page and the pool is exhausted,
+            the most recently admitted sequence is preempted (vLLM-style
+            recompute preemption): its pages are freed and it re-queues with
+            prompt + generated-so-far, to be re-prefilled when space frees.
+
+Throughput comes from the jit cache staying warm: the decode step sees one
+static shape (max_batch x max_pages_per_seq), prefill sees one shape per
+page-bucketed prompt length.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import prefill
+from repro.models.config import ModelConfig
+from repro.serving.decode import make_paged_decode_step
+from repro.serving.paged_cache import PagedKVCache
+
+__all__ = ["PagedRequest", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class PagedRequest:
+    """One generation request; ``out`` accumulates across preemptions."""
+
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: PagedRequest
+    page_ids: List[int]
+    seq_len: int                    # tokens whose K/V are in the pool
+    last_tok: int                   # next decode step's input token
+    ticket: int = 0                 # admission order (eviction picks max)
+
+
+class ContinuousBatcher:
+    def __init__(self, params_q, cfg: ModelConfig, cache: PagedKVCache,
+                 max_batch: int = 4, use_pallas: bool = True):
+        self.params = params_q
+        self.cfg = cfg
+        self.cache = cache
+        self.B = max_batch
+        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self.queue: Deque[PagedRequest] = collections.deque()
+        self.done: List[PagedRequest] = []
+        self.step_fn = jax.jit(make_paged_decode_step(cfg, use_pallas=use_pallas))
+        self._prefill_fns = {}
+        self.stats = {"steps": 0, "prefills": 0, "evictions": 0,
+                      "peak_pages": 0}
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: PagedRequest) -> None:
+        if len(req.prompt) + req.max_new > \
+                self.cache.max_pages_per_seq * self.cache.page_size:
+            raise ValueError("request exceeds max_pages_per_seq budget")
+        self.queue.append(req)
+
+    def _prefill_fn(self, s_pad: int):
+        if s_pad not in self._prefill_fns:
+            self._prefill_fns[s_pad] = jax.jit(
+                lambda p, toks: prefill(p, self.cfg, toks, s_pad))
+        return self._prefill_fns[s_pad]
+
+    def _admit_one(self) -> bool:
+        """Prefill the queue head into a free slot. False if blocked."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return False
+        req = self.queue[0]
+        plen = len(req.prompt) + len(req.out)  # preempted: re-prefill both
+        n_pages = self.cache.pages_for(plen)
+        # when the prompt exactly fills its pages, the first decode write
+        # (position plen) needs one more page — grab it at admission so the
+        # slot never scatters into the null page
+        extra = 1 if plen % self.cache.page_size == 0 else 0
+        page_ids = self.cache.allocator.alloc(n_pages + extra)
+        if page_ids is None:
+            return False
+        self.queue.popleft()
+        s_pad = n_pages * self.cache.page_size
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :plen] = np.concatenate([req.prompt, req.out]) \
+            if req.out else req.prompt
+        logits, kv = self._prefill_fn(s_pad)(self.params, jnp.asarray(toks))
+        self.cache.write_prefill(page_ids[:n_pages], kv, plen)
+        nxt = int(jnp.argmax(logits[0, plen - 1, : self.cfg.vocab_size]))
+        self.stats["prefills"] += 1
+        slot = _Slot(req=req, page_ids=page_ids, seq_len=plen, last_tok=nxt,
+                     ticket=self.stats["prefills"])
+        req.out.append(nxt)
+        self.slots[free[0]] = slot
+        self._finish_if_done(free[0])
+        return True
+
+    def _admit(self) -> None:
+        while self._admit_one():
+            pass
+
+    # -- eviction / reclamation --------------------------------------------
+
+    def _release(self, i: int) -> None:
+        slot = self.slots[i]
+        self.cache.allocator.free(slot.page_ids)
+        self.slots[i] = None
+
+    def _evict_newest(self) -> bool:
+        """Preempt the youngest live sequence back to the queue head."""
+        live = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if len(live) <= 1:
+            return False  # never evict the only runner: no forward progress
+        i, slot = max(live, key=lambda t: t[1].ticket)
+        self.stats["evictions"] += 1
+        self.queue.appendleft(slot.req)
+        self._release(i)
+        return True
+
+    def _ensure_page_capacity(self) -> None:
+        """Every live slot must own the page its next token writes into."""
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            while len(slot.page_ids) * self.cache.page_size <= slot.seq_len:
+                got = self.cache.allocator.alloc(1)
+                if got is not None:
+                    slot.page_ids.extend(got)
+                    break
+                if not self._evict_newest():
+                    raise RuntimeError(
+                        "page pool exhausted with a single live sequence; "
+                        "grow n_pages or shrink max_new")
+                if self.slots[i] is None:  # evicted ourselves (i was newest)
+                    break
+
+    def _finish_if_done(self, i: int) -> None:
+        slot = self.slots[i]
+        if slot is not None and len(slot.req.out) >= slot.req.max_new:
+            self.done.append(slot.req)
+            self._release(i)
+
+    # -- the decode loop ---------------------------------------------------
+
+    def _batch_arrays(self):
+        bt = np.zeros((self.B, self.cache.max_pages_per_seq), np.int32)
+        lens = np.zeros((self.B,), np.int32)
+        toks = np.zeros((self.B, 1), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            bt[i] = self.cache.block_table_row(slot.page_ids)
+            lens[i] = slot.seq_len
+            toks[i, 0] = slot.last_tok
+        return jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(lens)
+
+    def step(self) -> int:
+        """Admit + one decode step for all live slots. Returns #live."""
+        self._admit()
+        self._ensure_page_capacity()
+        self._admit()  # eviction may have freed a slot a queued req fits in
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return 0
+        in_use = self.cache.allocator.n_pages - self.cache.allocator.reserved \
+            - self.cache.allocator.num_free
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
+        toks, bt, lens = self._batch_arrays()
+        next_toks, self.cache.pools = self.step_fn(
+            self.params, toks, self.cache.pools, bt, lens)
+        next_toks = np.asarray(next_toks)
+        self.stats["steps"] += 1
+        for i in live:
+            slot = self.slots[i]
+            slot.seq_len += 1
+            slot.last_tok = int(next_toks[i, 0])
+            slot.req.out.append(slot.last_tok)
+            self._finish_if_done(i)
+        return len(live)
+
+    def run(self, requests) -> List[List[int]]:
+        """Serve a request list to completion; outputs in submission order."""
+        for r in requests:
+            self.submit(r)
+        while self.queue or any(s is not None for s in self.slots):
+            n = self.step()
+            if n == 0 and self.queue:
+                raise RuntimeError("queue stalled: prompts cannot be admitted")
+        return [r.out[: r.max_new] for r in requests]

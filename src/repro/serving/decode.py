@@ -1,0 +1,112 @@
+"""Jit-able paged decode step: one token for every batch slot, KV in pages.
+
+The step mirrors ``repro.models.model.decode_step``'s scanned layer stack but
+replaces the contiguous-cache attention with the paged path:
+
+  1. scatter-write this step's K/V (quantized to int8 when configured) into
+     each sequence's current page at ``(block_table[b, pos // psz], pos % psz)``
+  2. attend over the pool through ``kernels.paged_decode`` (block table +
+     per-sequence lengths scalar-prefetched into the Pallas grid)
+
+Unlike the dense step, positions are PER-SEQUENCE (``seq_lens`` (B,)) — the
+whole point of continuous batching is that batch slots sit at unrelated
+depths. Idle slots carry ``seq_len == 0`` and a null-page block table: their
+write lands in the reserved page and their attention output is fully masked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor
+from repro.kernels import paged_decode
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.model import dequant_tree, embed_tokens
+
+__all__ = ["make_paged_decode_step", "paged_attention_block"]
+
+
+def _write_token(pool, phys, slot, val):
+    """pool (N, psz, ...) <- val (B, ...) at (phys[b], slot[b]) per slot b."""
+    return pool.at[phys, slot].set(val.astype(pool.dtype))
+
+
+def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
+                          seq_lens, *, use_pallas: bool = True):
+    """Attention sublayer over the paged cache (one layer's pool slices).
+
+    x: (B, 1, D) normed input; pools: {"k"/"v": (N, psz, Hkv, hd)[, scales]}.
+    Returns (attn_out (B, 1, D), updated pools).
+    """
+    positions = seq_lens[:, None]                       # (B, 1) write position
+    q, k, v = L.attn_qkv(p, cfg, x, positions)
+    B = q.shape[0]
+    psz = pools["k"].shape[1]
+    phys = jnp.take_along_axis(block_tables, (seq_lens // psz)[:, None],
+                               axis=1)[:, 0]            # (B,) physical page
+    slot = seq_lens % psz
+    new = dict(pools)
+    if "k_scale" in pools:  # int8 pool: same convention as the dense cache
+        kq, vq, ks, vs = L.quantize_kv(k, v)
+        new["k"] = _write_token(pools["k"], phys, slot, kq[:, 0])
+        new["v"] = _write_token(pools["v"], phys, slot, vq[:, 0])
+        new["k_scale"] = _write_token(pools["k_scale"], phys, slot, ks[:, 0])
+        new["v_scale"] = _write_token(pools["v_scale"], phys, slot, vs[:, 0])
+    else:
+        new["k"] = _write_token(pools["k"], phys, slot, k[:, 0])
+        new["v"] = _write_token(pools["v"], phys, slot, v[:, 0])
+    out = paged_decode(q[:, 0], new["k"], new["v"], block_tables, seq_lens + 1,
+                       new.get("k_scale"), new.get("v_scale"),
+                       use_pallas=use_pallas)
+    return L.attn_out(p, out[:, None].astype(q.dtype), cfg), new
+
+
+def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True):
+    """(params_q, tokens (B,1), pools, block_tables (B,P), seq_lens (B,))
+    -> (next_token (B,1) int32, updated pools).
+
+    ``pools`` leaves carry a leading n_layers axis and are scanned alongside
+    the stacked layer params, exactly like the dense cache in
+    ``model.decode_step``. Only attention-cache architectures page.
+    """
+    if cfg.block_pattern not in ("dense", "moe"):
+        raise ValueError(f"paged decode requires attention blocks, "
+                         f"got {cfg.block_pattern!r}")
+    if cfg.is_enc_dec:
+        raise ValueError("paged decode does not cover cross-attention caches")
+
+    def step(params_q, tokens, pools, block_tables, seq_lens):
+        positions = seq_lens[:, None]
+        h = embed_tokens(params_q, cfg, tokens, positions)
+
+        def body(carry, xs):
+            pl, pool_slice = xs
+            pl = dequant_tree(pl, jnp.dtype(cfg.compute_dtype))
+            a_in = L.apply_norm(carry, pl["ln1"], cfg.norm)
+            a, new_pool = paged_attention_block(
+                pl["attn"], cfg, a_in, pool_slice, block_tables, seq_lens,
+                use_pallas=use_pallas)
+            hh = carry + a
+            m_in = L.apply_norm(hh, pl["ln2"], cfg.norm)
+            if "moe" in pl:
+                hh = hh + L.moe_ffn(pl["moe"], cfg, m_in)
+            else:
+                hh = hh + L.mlp(pl["mlp"], cfg, m_in)
+            return hh, new_pool
+
+        h, new_pools = jax.lax.scan(body, h, (params_q["blocks"], pools),
+                                    unroll=cfg.unroll_layers)
+        h = L.apply_norm(h, params_q["final_norm"], cfg.norm)
+        head = (params_q["embed"]["tok"].T if cfg.tie_embeddings
+                else params_q["lm_head"])
+        if isinstance(head, QTensor):
+            head = head.dequantize(h.dtype)
+        logits = h @ head.astype(h.dtype)
+        V = logits.shape[-1]
+        if V > cfg.vocab_size:
+            logits = jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -jnp.inf)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_pools
+
+    return step

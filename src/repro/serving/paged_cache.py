@@ -1,0 +1,161 @@
+"""Paged KV-cache storage: a global page pool + per-sequence block tables.
+
+Instead of one contiguous ``(B, max_len, ...)`` cache buffer per batch slot
+(whose memory is ``max_len``-bound regardless of actual lengths), the cache is
+a pool of fixed-size pages shared by every sequence:
+
+    k_pages / v_pages : (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+
+A sequence of length ``s`` holds exactly ``ceil(s / page_size)`` page ids (the
+same ids index every layer's pool), so pool memory tracks the LIVE token count
+— the memory term BiLLM (2402.04291) shows dominates ultra-low-bit serving.
+Page ids are handed out by a free-list ``PageAllocator`` and returned when a
+sequence finishes (or is preempted), which is what lets the continuous
+batcher keep admitting new requests between decode steps.
+
+Physical page 0 is reserved as the *null page*: idle batch slots point their
+block tables at it, so the jitted decode step can scatter-write
+unconditionally without corrupting a live sequence.
+
+With ``cfg.kv_cache_dtype == "int8"`` pages store int8 codes plus per-(slot,
+head) absmax scales — the same quantized layout as the contiguous cache in
+``repro.models.layers`` (scales per group of ``head_dim`` values, matching the
+group-quant scales convention of one scale per contiguous value group).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+__all__ = ["PageAllocator", "PagedKVCache", "NULL_PAGE"]
+
+NULL_PAGE = 0
+
+
+class PageAllocator:
+    """LIFO free-list over page ids [reserved, n_pages).
+
+    ``alloc`` is all-or-nothing (a partial grant would deadlock the batcher:
+    a sequence cannot attend over half its prompt), and ``free`` rejects
+    double-frees — an id returned twice means two sequences believe they own
+    the same page, which silently corrupts attention output.
+    """
+
+    def __init__(self, n_pages: int, reserved: int = 1):
+        if n_pages <= reserved:
+            raise ValueError(f"need more than {reserved} pages, got {n_pages}")
+        self.n_pages = n_pages
+        self.reserved = reserved
+        self._free: List[int] = list(range(n_pages - 1, reserved - 1, -1))
+        self._live = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n page ids, or None (and no side effects) if fewer than n are free."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._live.update(ids)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i not in self._live:
+                raise ValueError(f"double free / foreign page id {i}")
+            self._live.discard(i)
+            self._free.append(i)
+
+
+class PagedKVCache:
+    """Device page pools for every layer plus the page allocator.
+
+    The pools are plain jnp arrays handed in and out of the jitted decode
+    step (functional updates); this object owns their *identity* between
+    steps and the host-side allocator state.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
+                 max_pages_per_seq: int):
+        if cfg.block_pattern not in ("dense", "moe"):
+            raise ValueError(
+                f"paged KV cache requires an attention cache; "
+                f"block_pattern={cfg.block_pattern!r} keeps O(1) state")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_pages_per_seq = max_pages_per_seq
+        self.allocator = PageAllocator(n_pages)
+        L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+        self.quantized = cfg.kv_cache_dtype == "int8"
+        dt = jnp.dtype(cfg.compute_dtype)
+        kv_dt = jnp.int8 if self.quantized else dt
+        self.pools = {
+            "k": jnp.zeros((L, n_pages, page_size, Hkv, hd), kv_dt),
+            "v": jnp.zeros((L, n_pages, page_size, Hkv, hd), kv_dt),
+        }
+        if self.quantized:
+            self.pools["k_scale"] = jnp.zeros((L, n_pages, page_size, Hkv), dt)
+            self.pools["v_scale"] = jnp.zeros((L, n_pages, page_size, Hkv), dt)
+
+    # -- geometry ----------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    def pool_bytes(self) -> int:
+        return sum(int(a.size * a.dtype.itemsize) for a in self.pools.values())
+
+    def dense_equiv_bytes(self, batch: int, max_len: int) -> int:
+        """What a contiguous (B, max_len) cache would cost at the same dtype."""
+        per_tok = sum(
+            int(np.prod(a.shape[3:]) * a.dtype.itemsize) * a.shape[0]
+            for a in self.pools.values())
+        return batch * max_len * per_tok
+
+    # -- block tables ------------------------------------------------------
+
+    def block_table_row(self, page_ids: Sequence[int]) -> np.ndarray:
+        """(max_pages_per_seq,) int32 row, padded with the null page."""
+        if len(page_ids) > self.max_pages_per_seq:
+            raise ValueError(
+                f"sequence needs {len(page_ids)} pages > "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        row = np.full((self.max_pages_per_seq,), NULL_PAGE, np.int32)
+        row[: len(page_ids)] = page_ids
+        return row
+
+    # -- prefill write -----------------------------------------------------
+
+    def write_prefill(self, page_ids: Sequence[int], cache: dict,
+                      length: int) -> None:
+        """Scatter a freshly prefilled contiguous cache into the pool.
+
+        ``cache`` is ``model.prefill``'s per-layer cache for ONE sequence
+        (leaves (L, 1, S_pad, ...)) with ``S_pad >= len(page_ids) *
+        page_size`` covering the ``length``-token prompt. Rows past
+        ``length`` inside the last page carry garbage — masked at read time
+        by the per-sequence length.
+        """
+        n = len(page_ids)
+        need = self.pages_for(length)
+        if n < need:
+            raise ValueError(f"{n} pages cannot hold {length} tokens")
+        ids = jnp.asarray(page_ids, jnp.int32)
+        for key in self.pools:
+            src = cache[key][:, 0]                       # (L, S_pad, ...)
+            if src.shape[1] < n * self.page_size:
+                raise ValueError(
+                    f"prefill cache depth {src.shape[1]} < {n} pages")
+            src = src[:, : n * self.page_size]
+            src = src.reshape((src.shape[0], n, self.page_size) + src.shape[2:])
+            self.pools[key] = self.pools[key].at[:, ids].set(
+                src.astype(self.pools[key].dtype))
