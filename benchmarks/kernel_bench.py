@@ -17,9 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import ART, emit, timed
+from repro.core.invariance import apply_rotation_cols
 from repro.core.quant import QuantConfig, quantize_tensor
 from repro.kernels.ref import (group_quant_ref, paged_decode_ref,
-                               quant_matmul_ref)
+                               quant_matmul_ref, transform_quant_ref)
 
 
 def run():
@@ -53,13 +54,41 @@ def run():
         # fused kernel: 1 read + 1 write vs 4 passes un-fused
         record(f"kernel/group_quant/{K}x{N}b{bits}", us, "fused_hbm_passes=2_of_8")
 
+    # fused transform+fake-quant (the population search's per-proposal hot
+    # path) vs materialize-then-quantize. ``derived``: the fused kernel reads
+    # the weight once and writes the roundtrip once (2 HBM passes) where the
+    # unfused path also materializes T(θ) in fp32 and re-reads it to quantize
+    # (4 passes) — a 2x weight-traffic cut per proposal on the TPU target.
+    # CPU proxy: one composed XLA program vs two jit programs with a real
+    # materialization boundary between them.
+    for (F, G) in [(256, 64), (512, 128), (512, 32)]:
+        D, bits = 256, 2
+        w = jax.random.normal(key, (D, F))
+        pi = jax.random.permutation(jax.random.PRNGKey(1), F).astype(jnp.int32)
+        s = 1.0 + 0.05 * jax.random.normal(jax.random.PRNGKey(2), (F,))
+        phi = 1e-3 * jax.random.normal(jax.random.PRNGKey(3), (F // 2,))
+        t_stage = jax.jit(lambda w, pi, s, phi:
+                          (apply_rotation_cols(w, phi) * s[None, :])[:, pi])
+        q_stage = jax.jit(lambda t: group_quant_ref(t, bits, G)[0])
+        fused = jax.jit(lambda w, pi, s, phi: transform_quant_ref(
+            w, pi, s, phi, bits=bits, group=G, mode="up")[0])
+        jax.block_until_ready(q_stage(t_stage(w, pi, s, phi)))  # warm
+        jax.block_until_ready(fused(w, pi, s, phi))
+        _, us_mat = timed(lambda: jax.block_until_ready(
+            q_stage(jax.block_until_ready(t_stage(w, pi, s, phi)))), repeat=5)
+        _, us_fused = timed(lambda: jax.block_until_ready(
+            fused(w, pi, s, phi)), repeat=5)
+        record(f"kernel/transform_quant/F{F}g{G}/materialize", us_mat,
+               "weight_hbm_passes=4")
+        record(f"kernel/transform_quant/F{F}g{G}/fused", us_fused,
+               f"weight_hbm_passes=2_of_4={us_mat/max(us_fused, 1e-9):.2f}x_cpu")
+
     # paged decode attention: B sequences at ragged depths over a page pool.
     # ``derived``: CAPACITY ratio — tokens a contiguous (B, max_len) cache
-    # must hold in HBM vs the page-granular live allocation. This is the
-    # paging memory win (more sequences per pool), NOT streamed decode
-    # bytes: the shipped kernel still visits every block-table slot
-    # (masked-page skipping is a ROADMAP item), so read traffic is
-    # capacity-bound either way.
+    # must hold in HBM vs the page-granular live allocation. Since the
+    # dead-page skip (pl.when on page index vs length + clamped block
+    # index), the same ratio bounds the kernel's decode READ traffic too:
+    # dead block-table slots issue no DMA, so reads track live pages.
     for (B, H, Dh, psz, max_pages, fill) in [(8, 8, 64, 16, 16, 0.5),
                                              (16, 8, 64, 32, 8, 0.25)]:
         n_pages = B * max_pages + 1

@@ -33,6 +33,7 @@ __all__ = [
     "FFNTransform",
     "identity_transform",
     "apply_rotation_rows",
+    "apply_rotation_cols",
     "apply_transform_ffn",
     "apply_transform_mamba",
     "propose",
@@ -82,6 +83,12 @@ def apply_rotation_rows(w: jnp.ndarray, phi: jnp.ndarray, inverse: bool = False)
     return _rotate_pairs(w, phi, axis=0, inverse=inverse)
 
 
+def apply_rotation_cols(w: jnp.ndarray, phi: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """w @ Rᵀ for w whose SECOND axis is the rotated (F) axis (up/gate
+    column convention; the fused transform+fake-quant kernel's oracle)."""
+    return _rotate_pairs(w, phi, axis=1, inverse=inverse)
+
+
 def apply_transform_ffn(
     t: FFNTransform,
     w_up: jnp.ndarray,
@@ -97,7 +104,7 @@ def apply_transform_ffn(
     the inverse order on w_down rows.
     """
     # --- up projection columns: R, S, P
-    up = _rotate_pairs(w_up, t.phi, axis=1, inverse=False)
+    up = apply_rotation_cols(w_up, t.phi)
     up = up * t.s[None, :]
     up = up[:, t.pi]
     # --- down projection rows. Paper: W̄_down = W_down Rᵀ S⁻¹ Pᵀ with

@@ -1,10 +1,11 @@
-"""Activation-guided discrete search (paper Algorithm 1).
+"""Adapters + front-end for the discrete search (paper Algorithm 1).
 
-Hill climbing over per-layer invariant transforms: at each step, sample a
-layer (a *unit*: a dense FFN, one MoE expert's FFN, or one Mamba block),
-propose a partial reshuffle of π plus Gaussian random-walk moves on (s, φ),
-re-quantize that unit, run the calibration forward pass, and accept iff the
-combined loss improves.
+The search loop itself lives in ``repro.search.engine`` — a population ×
+island annealed engine whose ``population=1, islands=1, temperature=0``
+defaults reproduce the original single-chain hill climb bit-for-bit. This
+module keeps what is model-family-specific: the *adapters* that expose a
+family's transformable units (dense FFN, MoE expert, Mamba block, shared
+hybrid FFN) plus the ``run_search`` entry point every caller already uses.
 
 TPU-native execution model (DESIGN.md §3): the whole proposal evaluation —
 transform → fake-quant → forward → loss — is ONE jitted function with the
@@ -17,19 +18,14 @@ zero extra communication.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import invariance as inv
-from repro.core import objective as obj
 from repro.core.quant import QuantConfig, fake_quant
 from repro.models.config import ModelConfig
-from repro.models.model import forward
 
 __all__ = ["SearchConfig", "SearchResult", "DenseFFNAdapter", "MoEAdapter",
            "MambaAdapter", "run_search"]
@@ -44,6 +40,13 @@ class SearchConfig:
     ce_weight: float = 10.0        # CE is 10x more important at step 0 (§4.1)
     proposal: inv.ProposalConfig = dataclasses.field(default_factory=inv.ProposalConfig)
     log_every: int = 200
+    # --- engine scale-out (repro.search); defaults = legacy behavior ---
+    population: int = 1            # candidates per step, one batched eval
+    islands: int = 1               # independent chains (data-axis parallel)
+    temperature: float = 0.0       # initial annealing T; 0 = greedy climb
+    anneal: str = "geometric"      # schedule: constant | geometric | linear
+    migrate_every: int = 50        # elite-migration cadence (0 = never)
+    fused_kernel: bool = False     # kernels.transform_quant fused hot path
 
 
 @dataclasses.dataclass
@@ -54,6 +57,8 @@ class SearchResult:
     accept_rate: float
     final_loss: float
     initial_loss: float
+    island_histories: Optional[list] = None  # per-island histories (engine)
+    stats: Optional[dict] = None   # migrations / uphill accepts / proposals-per-sec
 
 
 def _tree_slice(tree, i):
@@ -99,6 +104,31 @@ class DenseFFNAdapter:
             out[k] = fake_quant(v, qcfg) if v.ndim >= 2 else v
         return out
 
+    def transform_quant_unit(self, base, t: inv.FFNTransform, u, qcfg: QuantConfig):
+        """Fused hot path: (π, s, φ) + group fake-quant in ONE kernel pass per
+        weight (``kernels.transform_quant``) instead of materializing the
+        transformed fp32 weights and re-reading them to quantize. Biases are
+        tiny and stay on the jnp path (they are never quantized)."""
+        from repro.kernels import transform_quant
+        b = _tree_slice(base, u)
+        ident_s = jnp.ones_like(t.s)
+        ident_phi = jnp.zeros_like(t.phi)
+        out = {}
+        for k, s_vec, phi_vec in (("up", t.s, t.phi),
+                                  ("gate", ident_s, ident_phi)):
+            if k in b:  # gate branch is permuted only (see apply_transform_ffn)
+                out[k] = transform_quant(
+                    b[k], t.pi, s_vec, phi_vec, bits=qcfg.bits,
+                    group=qcfg.resolve_group(b[k].shape[0]), mode="up")[0]
+        out["down"] = transform_quant(
+            b["down"], t.pi, t.s, t.phi, bits=qcfg.bits,
+            group=qcfg.resolve_group(b["down"].shape[0]), mode="down")[0]
+        if "b_up" in b:
+            out["b_up"] = (inv.apply_rotation_rows(b["b_up"], t.phi) * t.s)[t.pi]
+        if "b_gate" in b:
+            out["b_gate"] = b["b_gate"][t.pi]
+        return out
+
     def install(self, params, fq_stack):
         params = dict(params)
         blocks = dict(params["blocks"])
@@ -134,6 +164,10 @@ class MoEAdapter:
 
     def quant_unit(self, unit, qcfg):
         return {k: fake_quant(v, qcfg) for k, v in unit.items()}
+
+    # per-expert units carry the same up/down[/gate] layout as a dense FFN,
+    # so the fused transform+fake-quant path applies unchanged
+    transform_quant_unit = DenseFFNAdapter.transform_quant_unit
 
     def install(self, params, fq_stack):
         params = dict(params)
@@ -278,7 +312,7 @@ def run_search_hybrid(params_fp, params_base, cfg, qcfg, calib_tokens,
 
 
 # ---------------------------------------------------------------------------
-# The search loop (Algorithm 1)
+# The search entry point (Algorithm 1) — thin front-end over repro.search
 # ---------------------------------------------------------------------------
 
 def run_search(
@@ -297,87 +331,13 @@ def run_search(
     *dequantized-domain* weights the base PTQ method produced (AWQ-scaled,
     GPTQ-compensated, or plain θ₀ for RTN); all OTHER quantizable weights must
     already be fake-quantized (they stay fixed during the search).
+
+    The loop is ``repro.search.engine.run_population_search``; the default
+    ``SearchConfig`` (population=1, islands=1, temperature=0) reproduces the
+    original single-chain hill climb bit-for-bit.
     """
-    adapter = adapter or make_adapter(cfg)
-    fwd_kw = forward_kwargs or {}
-    n_match = min(scfg.n_match_layers, cfg.n_layers)
-
-    base = adapter.base_stack(params_base)
-    proposer = getattr(adapter, "propose", None) or (
-        lambda key, t, pcfg: inv.propose(key, t, pcfg))
-
-    # init transforms (identity) + initial fake-quant of every unit
-    t0 = inv.identity_transform(adapter.f_dim)
-    transforms = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (adapter.n_units,) + x.shape).copy(), t0)
-    # vmap so per-unit slices (not the stacked arrays) hit quant_unit — keeps
-    # the ndim>=2 "skip biases" check correct.
-    fq_stack = jax.vmap(lambda b: adapter.quant_unit(b, qcfg))(base)
-
-    # reference forward (FP model)
-    logits_fp, hidden_fp = forward(params_fp, cfg, calib_tokens,
-                                   collect_hidden=True, **fwd_kw)
-    hidden_fp = jax.lax.stop_gradient(hidden_fp[:n_match]) if n_match else None
-    logits_fp = jax.lax.stop_gradient(logits_fp)
-
-    @functools.partial(jax.jit, static_argnames=())
-    def eval_stack(fq):
-        params_q = adapter.install(params_base, fq)
-        logits, hidden = forward(params_q, cfg, calib_tokens,
-                                 collect_hidden=True, **fwd_kw)
-        if scfg.objective == "kl":
-            ce = obj.calib_kl(logits, logits_fp, cfg.vocab_size)
-        else:
-            ce = obj.calib_ce(logits, calib_tokens, cfg.vocab_size)
-        mse = (obj.activation_mse(hidden, hidden_fp, n_match)
-               if n_match else jnp.float32(0.0))
-        return ce, mse
-
-    ce0, mse0 = map(float, eval_stack(fq_stack))
-    alpha = obj.resolve_alpha(ce0, mse0, scfg.ce_weight) if n_match else 0.0
-    best = ce0 + alpha * float(mse0)
-    initial_loss = best
-
-    @jax.jit
-    def step_fn(key, transforms, fq_stack, u):
-        k_prop, _ = jax.random.split(key)
-        t_u = _tree_slice(transforms, u)
-        t_new = proposer(k_prop, inv.FFNTransform(*t_u), scfg.proposal)
-        unit = adapter.transform_unit(base, t_new, u)
-        unit_fq = adapter.quant_unit(unit, qcfg)
-        fq_new = _tree_update(fq_stack, u, unit_fq)
-        ce, mse = eval_stack(fq_new)
-        loss = ce + alpha * mse
-        return loss, ce, mse, fq_new, t_new
-
-    rng = np.random.default_rng(scfg.seed)
-    key = jax.random.PRNGKey(scfg.seed)
-    history = [(0, best, ce0, float(mse0), True)]
-    n_accept = 0
-    t_start = time.time()
-    for step in range(1, scfg.steps + 1):
-        key, sub = jax.random.split(key)
-        u = jnp.int32(rng.integers(adapter.n_units))
-        loss, ce, mse, fq_new, t_new = step_fn(sub, transforms, fq_stack, u)
-        loss = float(loss)
-        accepted = loss < best
-        if accepted:
-            best = loss
-            fq_stack = fq_new
-            transforms = _tree_update(transforms, u, t_new)
-            n_accept += 1
-        history.append((step, loss, float(ce), float(mse), accepted))
-        if scfg.log_every and step % scfg.log_every == 0:
-            rate = n_accept / step
-            print(f"[search] step={step} best={best:.5f} accept={rate:.2%} "
-                  f"({(time.time() - t_start):.1f}s)")
-
-    params_q = adapter.install(params_base, fq_stack)
-    return SearchResult(
-        params_q=params_q,
-        transforms=transforms,
-        history=history,
-        accept_rate=n_accept / max(scfg.steps, 1),
-        final_loss=best,
-        initial_loss=initial_loss,
-    )
+    from repro.search.engine import run_population_search
+    return run_population_search(params_fp, params_base, cfg, qcfg,
+                                 calib_tokens, scfg,
+                                 adapter=adapter or make_adapter(cfg),
+                                 forward_kwargs=forward_kwargs)

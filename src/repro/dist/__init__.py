@@ -5,7 +5,8 @@ Layout:
     compat.py      — jax version shims (shard_map location / kwarg drift)
     sharding.py    — PartitionSpec trees over the ("data", "model") mesh
     fault.py       — straggler watchdog + checkpoint-restore resilient loop
-    collectives.py — group-quantized (compressed) all-reduce
+    collectives.py — group-quantized (compressed) all-reduce + the island
+                     search's scalar elite exchange (argmin_allgather)
     attention.py   — log-sum-exp partial-softmax merge for sharded KV decode
 
 Everything here is mesh-shape driven and divisibility-aware: a dim that does
@@ -15,7 +16,7 @@ same rules serve every assigned architecture (14-head internvl2 included).
 from repro.dist.sharding import (ShardingRules, param_specs, opt_state_specs,
                                  cache_specs, data_spec, to_shardings)
 from repro.dist.fault import StepWatchdog, run_resilient, remesh_restore
-from repro.dist.collectives import compressed_psum
+from repro.dist.collectives import compressed_psum, argmin_allgather
 from repro.dist.attention import (partial_decode_attention, merge_partials,
                                   sharded_decode_attention,
                                   sharded_paged_decode_attention)
@@ -24,7 +25,7 @@ __all__ = [
     "ShardingRules", "param_specs", "opt_state_specs", "cache_specs",
     "data_spec", "to_shardings",
     "StepWatchdog", "run_resilient", "remesh_restore",
-    "compressed_psum",
+    "compressed_psum", "argmin_allgather",
     "partial_decode_attention", "merge_partials", "sharded_decode_attention",
     "sharded_paged_decode_attention",
 ]

@@ -22,7 +22,20 @@ from repro.core.quant import (QuantConfig, compute_qparams, dequantize_codes,
                               pack_codes, quantize_codes, unpack_codes,
                               vals_per_word)
 
-__all__ = ["compressed_psum"]
+__all__ = ["compressed_psum", "argmin_allgather"]
+
+
+def argmin_allgather(x, axis_name: str):
+    """(global min, owning shard index) of a per-shard scalar over
+    ``axis_name`` (shard_map context only).
+
+    One scalar all-gather — the entire cross-host cost of the island search's
+    elite migration (``repro.search.islands``): each data-axis shard runs an
+    independent island and only the winning loss/owner is exchanged.
+    """
+    xs = jax.lax.all_gather(jnp.asarray(x, jnp.float32), axis_name)
+    i = jnp.argmin(xs)
+    return xs[i], i.astype(jnp.int32)
 
 
 def compressed_psum(x, axis_name: str, *, bits: int = 8, group: int = 32):

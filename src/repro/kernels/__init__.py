@@ -4,6 +4,10 @@
   hot loop; cuts weight HBM traffic by the packing factor.
 - ``group_quant``: fused group quant->dequant roundtrip — the discrete
   search's inner primitive (one VMEM pass instead of four HBM passes).
+- ``transform_quant``: fused (π, s, φ) invariant transform + group
+  fake-quant — the population search's per-proposal hot path; one VMEM pass
+  instead of materialize-transformed-weights-then-quantize (two full HBM
+  round trips).
 - ``flash_decode`` / ``paged_decode``: fused one-token decode attention over
   a contiguous (flash) or block-table-paged (paged) KV cache; the paged
   variant scalar-prefetches the block table so continuous batching reads
@@ -14,7 +18,7 @@ jit + CPU interpret-mode fallback; tests sweep shapes/dtypes against the
 oracles.
 """
 from repro.kernels.ops import (quant_matmul, group_quant, flash_decode,
-                               paged_decode, on_tpu)
+                               paged_decode, transform_quant, on_tpu)
 
 __all__ = ["quant_matmul", "group_quant", "flash_decode", "paged_decode",
-           "on_tpu"]
+           "transform_quant", "on_tpu"]

@@ -16,9 +16,16 @@ from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.group_quant import group_quant_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.paged_decode import paged_decode_pallas
+from repro.kernels.transform_quant import transform_quant_pallas
 
 __all__ = ["quant_matmul", "group_quant", "flash_decode", "paged_decode",
-           "on_tpu"]
+           "transform_quant", "on_tpu"]
+
+# VMEM budget for one transform_quant full-F strip. The kernel holds an
+# input strip AND a same-size fq output strip, and both revolve per grid
+# step so Pallas double-buffers each: ~4x the strip bytes must fit in the
+# ~16MB core VMEM. Past this the wrapper falls back to the jnp reference.
+_TQ_STRIP_BYTES = 3 * 1024 * 1024
 
 
 def on_tpu() -> bool:
@@ -85,6 +92,38 @@ def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, k_scale=None,
     return paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
                                k_scale, v_scale, normalize=normalize,
                                interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "mode", "use_pallas"))
+def transform_quant(w, pi, s, phi, *, bits: int, group: int, mode: str,
+                    use_pallas: bool = True):
+    """Fused (π, s, φ) invariant transform + group fake-quant roundtrip.
+
+    The search engine's fused hot path: one VMEM pass instead of
+    materializing the transformed fp32 weights and re-reading them to
+    quantize (two HBM round trips per proposal). ``mode="up"`` transforms
+    columns of a (D, F) weight; ``mode="down"`` transforms rows of a (F, D)
+    weight (there the permutation reshuffles the quant-group axis itself, so
+    the passes genuinely cannot be split). Returns (fq, scale, zero).
+    """
+    K, N = w.shape
+    f = N if mode == "up" else K
+    n_groups = K // group if K % group == 0 else 0
+    if mode == "up":
+        bg = 4 if n_groups % 4 == 0 else (2 if n_groups % 2 == 0 else 1)
+        strip = bg * group * f * 4
+        bn = 0
+    else:
+        bn = 128 if N % 128 == 0 else (N if N <= 128 else 0)
+        strip = K * max(bn, 1) * 4
+    ok = (n_groups > 0 and f % 2 == 0 and strip <= _TQ_STRIP_BYTES
+          and (mode == "up" or bn > 0))
+    if not (use_pallas and ok):
+        return ref.transform_quant_ref(w, pi, s, phi, bits=bits, group=group,
+                                       mode=mode)
+    return transform_quant_pallas(w, pi, s, phi, bits=bits, group=group,
+                                  mode=mode, bg=bg if mode == "up" else 4,
+                                  bn=bn or 128, interpret=not on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group", "use_pallas"))

@@ -13,7 +13,10 @@ VMEM across the page axis of the grid — the paged analogue of
     out[b,h] = softmax(q[b,h] · K[pages(b),h%]ᵀ / sqrt(Dh)) · V[pages(b),h%]
 
 GQA is handled inside the index map (query head h reads KV head h // rep), so
-the page pool is never repeated. Pages may be int8 with per-(slot, head)
+the page pool is never repeated. Fully-masked pages (slot index at or past
+``ceil(seq_len / page_size)``) are skipped with ``pl.when`` and their block
+index is clamped to the last live page so the dead steps issue no fresh DMA —
+short sequences in deep pools pay only for their live pages. Pages may be int8 with per-(slot, head)
 absmax scales (the serving cache layout); dequantization happens in-register
 per page. With ``normalize=False`` the kernel returns the raw partial stats
 (acc, m, l) instead of the normalized output — the exact log-sum-exp partials
@@ -38,6 +41,15 @@ def _kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
             o_ref, m_ref, l_ref, *, page_size, quantized, normalize):
     b = pl.program_id(0)
     p = pl.program_id(2)
+    # pages at or past ceil(seq_len / page_size) are fully masked: skip their
+    # compute entirely (their softmax contribution is exactly zero, so the
+    # running (o, m, l) state is untouched — the equivalence test_paged.py
+    # pins). The index maps clamp dead slots to the last live page, so the
+    # grid's block index does not change across dead steps and Pallas elides
+    # the HBM→VMEM copy — short sequences in deep pools stop paying for dead
+    # blocks. (A sequence with seq_len == 0 keeps one "live" page whose slots
+    # are all masked; its output stays the zero init.)
+    n_live = jnp.maximum((sl_ref[b] + page_size - 1) // page_size, 1)
 
     @pl.when(p == 0)
     def _init():
@@ -45,27 +57,29 @@ def _kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0, :].astype(jnp.float32)                   # (Dh,)
-    kb = k_ref[0, :, 0, :].astype(jnp.float32)               # (page_size, Dh)
-    vb = v_ref[0, :, 0, :].astype(jnp.float32)
-    if quantized:
-        kb = kb * ks_ref[0, :, 0][:, None].astype(jnp.float32)
-        vb = vb * vs_ref[0, :, 0][:, None].astype(jnp.float32)
+    @pl.when(p < n_live)
+    def _compute():
+        q = q_ref[0, 0, :].astype(jnp.float32)               # (Dh,)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)           # (page_size, Dh)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            kb = kb * ks_ref[0, :, 0][:, None].astype(jnp.float32)
+            vb = vb * vs_ref[0, :, 0][:, None].astype(jnp.float32)
 
-    dh = q.shape[0]
-    s = (kb @ q) * (dh ** -0.5)                              # (page_size,)
-    pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
-    mask = pos < sl_ref[b]
-    s = jnp.where(mask, s, NEG)
+        dh = q.shape[0]
+        s = (kb @ q) * (dh ** -0.5)                          # (page_size,)
+        pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
+        mask = pos < sl_ref[b]
+        s = jnp.where(mask, s, NEG)
 
-    m_prev = m_ref[0, 0]
-    l_prev = l_ref[0, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(s))
-    prob = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    o_ref[0, 0, :] = o_ref[0, 0, :] * corr + prob @ vb
-    m_ref[0, 0] = m_new
-    l_ref[0, 0] = l_prev * corr + jnp.sum(prob)
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        prob = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        o_ref[0, 0, :] = o_ref[0, 0, :] * corr + prob @ vb
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_prev * corr + jnp.sum(prob)
 
     if normalize:
         @pl.when(p == pl.num_programs(2) - 1)
@@ -94,19 +108,30 @@ def paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
         k_scale = jnp.ones((n_pages, page_size, Hkv), jnp.float32)
         v_scale = jnp.ones((n_pages, page_size, Hkv), jnp.float32)
 
+    def _live_page(bt, sl, b, p):
+        # clamp dead page slots (p >= ceil(len/psz)) to the last live page:
+        # the block index repeats across consecutive dead grid steps, so no
+        # fresh DMA is issued for pages the kernel will skip with pl.when.
+        n_live = jnp.maximum((sl[b] + page_size - 1) // page_size, 1)
+        return bt[b, jnp.minimum(p, n_live - 1)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, P),
         in_specs=[
             pl.BlockSpec((1, 1, Dh), lambda b, h, p, bt, sl: (b, h, 0)),
             pl.BlockSpec((1, page_size, 1, Dh),
-                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep, 0)),
+                         lambda b, h, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  h // rep, 0)),
             pl.BlockSpec((1, page_size, 1, Dh),
-                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep, 0)),
+                         lambda b, h, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  h // rep, 0)),
             pl.BlockSpec((1, page_size, 1),
-                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep)),
+                         lambda b, h, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  h // rep)),
             pl.BlockSpec((1, page_size, 1),
-                         lambda b, h, p, bt, sl: (bt[b, p], 0, h // rep)),
+                         lambda b, h, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  h // rep)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, Dh), lambda b, h, p, bt, sl: (b, h, 0)),

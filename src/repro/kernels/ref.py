@@ -4,11 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.invariance import apply_rotation_cols, apply_rotation_rows
 from repro.core.quant import (QuantConfig, compute_qparams, quantize_codes,
                               dequantize_codes, unpack_codes)
 
 __all__ = ["quant_matmul_ref", "group_quant_ref", "dequant_ref",
-           "flash_decode_ref", "paged_decode_ref"]
+           "flash_decode_ref", "paged_decode_ref", "transform_quant_ref"]
 
 
 def flash_decode_ref(q, k, v, k_scale=None, v_scale=None, kv_len=None):
@@ -88,3 +89,19 @@ def group_quant_ref(w, bits: int, group_size: int):
     codes = quantize_codes(w.astype(jnp.float32), scale, zero, cfg)
     fq = dequantize_codes(codes, scale, zero, cfg, out_dtype=w.dtype)
     return fq, scale, zero
+
+
+def transform_quant_ref(w, pi, s, phi, *, bits: int, group: int, mode: str):
+    """Materialize-then-quantize composition of ``apply_transform_ffn``'s
+    up/down branches with the group fake-quant roundtrip — the oracle for the
+    fused ``transform_quant`` kernel. Returns (fq, scale, zero)."""
+    w = w.astype(jnp.float32)
+    if mode == "up":        # w (D, F): rotate -> x s -> permute on columns
+        t = apply_rotation_cols(w, phi) * s[None, :]
+        t = t[:, pi]
+    elif mode == "down":    # w (F, D): rotate -> / s -> permute on rows
+        t = apply_rotation_rows(w, phi) * (1.0 / s)[:, None]
+        t = t[pi, :]
+    else:
+        raise ValueError(f"mode must be 'up' or 'down', got {mode!r}")
+    return group_quant_ref(t, bits, group)

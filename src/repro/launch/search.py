@@ -1,0 +1,115 @@
+"""Launch driver for the population × island discrete search.
+
+    PYTHONPATH=src python -m repro.launch.search --arch opt-tiny \
+        --steps 40 --population 4 --islands 2 --bits 2 --group 32
+
+Builds the local mesh, shards the calibration batch over the data axis
+(islands map 1:1 onto that axis in the multi-host story — each shard climbs
+on its own calibration shard and only the elite exchange crosses hosts),
+runs the RTN→InvarExplore pipeline through ``repro.search.engine``, and
+writes a proposals/sec artifact to
+``artifacts/benchmarks/BENCH_search.json`` so CI accumulates a search-perf
+trajectory next to ``BENCH_kernels.json``.
+
+Configs are run in their ``.reduced()`` form: this driver is the
+CPU-container benchmark/smoke entry; the full-size configs are exercised
+structurally by ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.pipeline import quantize_model
+from repro.core.quant import QuantConfig
+from repro.core.search import SearchConfig
+from repro.data.calib import calibration_tokens
+from repro.dist.sharding import ShardingRules, data_spec
+from repro.launch.mesh import make_local_mesh
+from repro.models import init_params
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "benchmarks"
+
+__all__ = ["run_search_bench", "main"]
+
+
+def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
+                     population: int = 4, islands: int = 1,
+                     temperature: float = 0.0, anneal: str = "geometric",
+                     migrate_every: int = 25, fused: bool = False,
+                     bits: int = 2, group: int = 32, n_seqs: int = 4,
+                     seq_len: int = 128, seed: int = 0,
+                     out: pathlib.Path = None) -> dict:
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+
+    mesh = make_local_mesh()
+    rules = ShardingRules(mesh, cfg)
+    calib = jnp.asarray(calibration_tokens(cfg.vocab_size, n_seqs=n_seqs,
+                                           seq_len=seq_len))
+    calib = jax.device_put(calib, jax.sharding.NamedSharding(
+        mesh, data_spec(rules, calib.shape[0])))
+
+    scfg = SearchConfig(steps=steps, seed=seed, n_match_layers=2, log_every=0,
+                        population=population, islands=islands,
+                        temperature=temperature, anneal=anneal,
+                        migrate_every=migrate_every, fused_kernel=fused)
+    qcfg = QuantConfig(bits=bits, group_size=group)
+
+    t0 = time.time()
+    result = quantize_model(params, cfg, qcfg, method="rtn",
+                            calib_tokens=calib, search=scfg)
+    dt = time.time() - t0
+    sr = result.search
+    proposals = sr.stats["proposals"] if sr.stats else steps
+    row = {
+        "name": (f"search/engine/{arch}s{steps}p{population}i{islands}"
+                 f"b{bits}g{group}" + ("fused" if fused else "")),
+        "us_per_call": round(dt * 1e6 / max(proposals, 1), 1),
+        "derived": (f"proposals_per_sec={proposals / max(dt, 1e-9):.2f} "
+                    f"loss={sr.initial_loss:.4f}->{sr.final_loss:.4f} "
+                    f"accept={sr.accept_rate:.2%} "
+                    f"migrations={sr.stats['migrations'] if sr.stats else 0}"),
+    }
+    print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    out = pathlib.Path(out) if out else ART / "BENCH_search.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps([row], indent=1))
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="opt-tiny")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--population", type=int, default=4)
+    ap.add_argument("--islands", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--anneal", default="geometric")
+    ap.add_argument("--migrate-every", type=int, default=25)
+    ap.add_argument("--fused", action="store_true",
+                    help="fused transform+fake-quant kernel hot path")
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--group", type=int, default=32)
+    ap.add_argument("--seqs", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    run_search_bench(args.arch, steps=args.steps, population=args.population,
+                     islands=args.islands, temperature=args.temperature,
+                     anneal=args.anneal, migrate_every=args.migrate_every,
+                     fused=args.fused, bits=args.bits, group=args.group,
+                     n_seqs=args.seqs, seq_len=args.seq_len, seed=args.seed,
+                     out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

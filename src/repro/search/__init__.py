@@ -1,0 +1,27 @@
+"""Parallel discrete-search engine (population × islands).
+
+The paper's Algorithm 1 evaluates ONE proposal per step on one chain; this
+package scales it along two orthogonal axes while keeping the single-chain
+greedy hill-climb as an exact special case:
+
+- ``population.py`` — K candidate transforms per step for the sampled unit,
+  all K evaluated in one vmap-batched transform→fake-quant→forward→loss
+  program (the calibration forward is amortized across candidates);
+- ``anneal.py``    — temperature schedules + the Metropolis acceptance rule
+  (T=0 reduces bit-for-bit to the legacy accept-iff-better);
+- ``islands.py``   — independent populations with counter-based per-island
+  key streams and elite migration on a fixed cadence (in-process loop here;
+  ``elite_over_mesh`` is the ``repro.dist`` building block for the
+  designed-for mesh-mapped execution, not yet wired);
+- ``engine.py``    — the loop that composes the three.
+
+``repro.core.search.run_search`` is a thin adapter-compatible front-end over
+``engine.run_population_search``.
+"""
+from repro.search.anneal import accept, temperature_schedule
+from repro.search.engine import run_population_search
+from repro.search.islands import IslandState, migrate
+from repro.search.population import candidate_keys
+
+__all__ = ["run_population_search", "temperature_schedule", "accept",
+           "IslandState", "migrate", "candidate_keys"]

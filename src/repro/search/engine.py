@@ -1,0 +1,208 @@
+"""Population × island annealed discrete search (the Algorithm 1 engine).
+
+One engine, three nested degrees of freedom, each defaulting to the paper's
+single-chain hill climb:
+
+- population K: K candidate transforms for the step's unit, evaluated in ONE
+  vmap-batched transform→fake-quant→forward→loss program (the calibration
+  forward is amortized K ways); the per-step move is the argmin candidate.
+- temperature T: Metropolis acceptance of the chosen candidate under an
+  annealing schedule; T=0 is the strict accept-iff-better rule.
+- islands: independent chains with per-island counter-based key streams and
+  elite migration on a fixed cadence (``repro.search.islands``).
+
+Bit-for-bit contract: at ``population=1, islands=1, temperature=0`` the
+engine's proposal keys, unit picks, jitted programs and accept decisions are
+EXACTLY the legacy ``core/search.py`` loop's, so the accepted-move trajectory
+reproduces the paper configuration unchanged (pinned by
+``tests/test_search_engine.py``).
+
+Multi-host note: proposals come from counter-based ``jax.random`` keys and
+unit picks/accept draws from a host-side ``default_rng(seed)`` stream, so
+every host replays the same chain and only the (all-reduced) scalar loss
+feeds the accept decision. Islands run sequentially in-process here; the
+mesh-mapped execution (one island per data-axis shard,
+``islands.elite_over_mesh`` as the per-migration scalar exchange) is the
+designed-for multi-host path, not yet wired (ROADMAP).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import invariance as inv
+from repro.core import objective as obj
+from repro.models.model import forward
+from repro.search import anneal
+from repro.search.islands import IslandState, make_island_streams, migrate
+from repro.search.population import candidate_keys, stack_trees, take_tree
+
+__all__ = ["run_population_search"]
+
+
+def _tree_slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _tree_update(tree, i, new):
+    return jax.tree.map(lambda x, n: x.at[i].set(n), tree, new)
+
+
+def run_population_search(
+    params_fp: dict,
+    params_base: dict,
+    cfg,
+    qcfg,
+    calib_tokens: jnp.ndarray,
+    scfg,
+    adapter,
+    forward_kwargs: Optional[dict] = None,
+):
+    """Run the engine; returns a ``core.search.SearchResult``.
+
+    ``params_fp`` / ``params_base`` follow the ``core.search.run_search``
+    contract (FP reference model; base-method continuous-domain FFN weights
+    with everything else already fake-quantized).
+    """
+    from repro.core.search import SearchResult  # front-end owns the dataclass
+
+    fwd_kw = forward_kwargs or {}
+    n_match = min(scfg.n_match_layers, cfg.n_layers)
+    K = max(int(getattr(scfg, "population", 1)), 1)
+    n_islands = max(int(getattr(scfg, "islands", 1)), 1)
+    migrate_every = int(getattr(scfg, "migrate_every", 0))
+    fused = bool(getattr(scfg, "fused_kernel", False))
+    fused = fused and hasattr(adapter, "transform_quant_unit")
+
+    base = adapter.base_stack(params_base)
+    proposer = getattr(adapter, "propose", None) or (
+        lambda key, t, pcfg: inv.propose(key, t, pcfg))
+
+    # identity transforms + initial fake-quant of every unit (per-unit slices
+    # hit quant_unit so the ndim>=2 "skip biases" check stays correct)
+    t0 = inv.identity_transform(adapter.f_dim)
+    transforms0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (adapter.n_units,) + x.shape).copy(), t0)
+    fq0 = jax.vmap(lambda b: adapter.quant_unit(b, qcfg))(base)
+
+    # reference forward (FP model)
+    logits_fp, hidden_fp = forward(params_fp, cfg, calib_tokens,
+                                   collect_hidden=True, **fwd_kw)
+    hidden_fp = jax.lax.stop_gradient(hidden_fp[:n_match]) if n_match else None
+    logits_fp = jax.lax.stop_gradient(logits_fp)
+
+    def eval_stack_fn(fq):
+        params_q = adapter.install(params_base, fq)
+        logits, hidden = forward(params_q, cfg, calib_tokens,
+                                 collect_hidden=True, **fwd_kw)
+        if scfg.objective == "kl":
+            ce = obj.calib_kl(logits, logits_fp, cfg.vocab_size)
+        else:
+            ce = obj.calib_ce(logits, calib_tokens, cfg.vocab_size)
+        mse = (obj.activation_mse(hidden, hidden_fp, n_match)
+               if n_match else jnp.float32(0.0))
+        return ce, mse
+
+    eval_stack = jax.jit(eval_stack_fn)
+
+    ce0, mse0 = map(float, eval_stack(fq0))
+    alpha = obj.resolve_alpha(ce0, mse0, scfg.ce_weight) if n_match else 0.0
+    loss0 = ce0 + alpha * float(mse0)
+
+    def quant_candidate(t_new, u):
+        if fused:
+            return adapter.transform_quant_unit(base, t_new, u, qcfg)
+        unit = adapter.transform_unit(base, t_new, u)
+        return adapter.quant_unit(unit, qcfg)
+
+    @jax.jit
+    def step_single(key, transforms, fq_stack, u):
+        # EXACTLY the legacy step: one proposal, unbatched evaluation — keeps
+        # the K=1 trajectory bit-identical to the original hill climb.
+        k_prop, _ = jax.random.split(key)
+        t_u = _tree_slice(transforms, u)
+        t_new = proposer(k_prop, inv.FFNTransform(*t_u), scfg.proposal)
+        unit = adapter.transform_unit(base, t_new, u)
+        unit_fq = adapter.quant_unit(unit, qcfg)
+        fq_new = _tree_update(fq_stack, u, unit_fq)
+        ce, mse = eval_stack(fq_new)
+        loss = ce + alpha * mse
+        return loss, ce, mse, fq_new, t_new
+
+    @jax.jit
+    def step_population(key, transforms, fq_stack, u):
+        keys = candidate_keys(key, K)
+        t_u = inv.FFNTransform(*_tree_slice(transforms, u))
+        cands = [proposer(keys[i], t_u, scfg.proposal) for i in range(K)]
+        fq_news = [_tree_update(fq_stack, u, quant_candidate(t, u))
+                   for t in cands]
+        fq_batch = stack_trees(fq_news)          # (K, n_units, ...)
+        ce, mse = jax.vmap(eval_stack_fn)(fq_batch)  # ONE batched forward
+        loss = ce + alpha * mse
+        i = jnp.argmin(loss)
+        return (loss[i], ce[i], mse[i], take_tree(fq_batch, i),
+                take_tree(stack_trees(cands), i))
+
+    step_fn = step_single if (K == 1 and not fused) else step_population
+    schedule = anneal.temperature_schedule(
+        getattr(scfg, "anneal", "geometric"),
+        float(getattr(scfg, "temperature", 0.0)), scfg.steps)
+
+    islands = []
+    for i in range(n_islands):
+        rng, key = make_island_streams(scfg.seed, i)
+        islands.append(IslandState(
+            index=i, rng=rng, key=key, transforms=transforms0, fq_stack=fq0,
+            current_loss=loss0, best_loss=loss0, best_transforms=transforms0,
+            best_fq=fq0, history=[(0, loss0, ce0, float(mse0), True)]))
+
+    stats = {"migrations": 0, "uphill_accepts": 0,
+             "proposals": scfg.steps * K * n_islands}
+    t_start = time.time()
+    for step in range(1, scfg.steps + 1):
+        T = schedule(step)
+        for isl in islands:
+            isl.key, sub = jax.random.split(isl.key)
+            u = jnp.int32(isl.rng.integers(adapter.n_units))
+            loss, ce, mse, fq_new, t_new = step_fn(
+                sub, isl.transforms, isl.fq_stack, u)
+            loss = float(loss)
+            delta = loss - isl.current_loss
+            uniform = isl.rng.random() if T > 0.0 else None
+            accepted = anneal.accept(delta, T, uniform)
+            if accepted:
+                stats["uphill_accepts"] += delta >= 0.0
+                isl.current_loss = loss
+                isl.fq_stack = fq_new
+                isl.transforms = _tree_update(isl.transforms, u, t_new)
+                isl.n_accept += 1
+                if loss < isl.best_loss:
+                    isl.best_loss = loss
+                    isl.best_transforms = isl.transforms
+                    isl.best_fq = isl.fq_stack
+            isl.history.append((step, loss, float(ce), float(mse), accepted))
+        if migrate_every and n_islands > 1 and step % migrate_every == 0:
+            stats["migrations"] += migrate(islands)
+        if scfg.log_every and step % scfg.log_every == 0:
+            best = min(s.best_loss for s in islands)
+            rate = sum(s.n_accept for s in islands) / (step * n_islands)
+            print(f"[search] step={step} best={best:.5f} accept={rate:.2%} "
+                  f"T={T:.4g} ({(time.time() - t_start):.1f}s)")
+
+    elite = min(islands, key=lambda s: s.best_loss)
+    stats["proposals_per_sec"] = stats["proposals"] / max(
+        time.time() - t_start, 1e-9)
+    return SearchResult(
+        params_q=adapter.install(params_base, elite.best_fq),
+        transforms=elite.best_transforms,
+        history=elite.history,
+        accept_rate=elite.n_accept / max(scfg.steps, 1),
+        final_loss=elite.best_loss,
+        initial_loss=loss0,
+        island_histories=[s.history for s in islands],
+        stats=stats,
+    )

@@ -1,0 +1,85 @@
+"""Island model: independent populations + elite migration on a cadence.
+
+Each island owns its full chain state (transforms, fake-quant stack, RNG
+streams) and explores independently; every ``migrate_every`` steps the
+global elite's best state replaces the worst island's current state. Island
+0's streams are EXACTLY the single-chain streams (host rng
+``default_rng(seed)``, device key ``PRNGKey(seed)``), so a 1-island run and
+island 0 of an N-island run walk identical trajectories until a migration
+actually rewrites someone's state — the reproducibility contract
+``tests/test_search_engine.py`` pins.
+
+Multi-host design (not yet wired — the engine runs islands sequentially
+in-process): islands map 1:1 onto the data-parallel mesh axis, every host
+running its own island on its calibration shard, with the elite exchange as
+the only cross-host traffic — ``elite_over_mesh`` below is that building
+block (an all-gather of one scalar loss per island via ``repro.dist``
+collectives inside ``shard_map``; the winner's state then moves as one
+broadcast of the unit stacks). The counter-based key discipline means no
+other synchronization would be needed; hooking this into a
+``jax.distributed`` run is a ROADMAP item.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.collectives import argmin_allgather
+
+__all__ = ["IslandState", "make_island_streams", "migrate", "elite_over_mesh"]
+
+
+@dataclasses.dataclass
+class IslandState:
+    """One chain's complete mutable search state."""
+
+    index: int
+    rng: np.random.Generator          # host stream: unit picks + accept draws
+    key: jnp.ndarray                  # device stream: proposal sampling
+    transforms: Any                   # stacked per-unit FFNTransform
+    fq_stack: Any                     # current fake-quant unit stack
+    current_loss: float
+    best_loss: float                  # elite (lowest loss ever seen)
+    best_transforms: Any
+    best_fq: Any
+    history: list = dataclasses.field(default_factory=list)
+    n_accept: int = 0
+
+
+def make_island_streams(seed: int, index: int):
+    """(host rng, device key) for island ``index``; island 0 reproduces the
+    legacy single-chain streams exactly."""
+    if index == 0:
+        return np.random.default_rng(seed), jax.random.PRNGKey(seed)
+    return (np.random.default_rng([seed, index]),
+            jax.random.fold_in(jax.random.PRNGKey(seed), index))
+
+
+def migrate(islands: List[IslandState]) -> bool:
+    """Elite migration: the best island's elite state overwrites the worst
+    island's CURRENT state (its own elite snapshot is kept unless beaten).
+    Returns True iff any state moved. Consumes no RNG from any island."""
+    if len(islands) < 2:
+        return False
+    src = min(islands, key=lambda s: s.best_loss)
+    dst = max(islands, key=lambda s: s.current_loss)
+    if src is dst or src.best_loss >= dst.current_loss:
+        return False
+    dst.transforms = src.best_transforms
+    dst.fq_stack = src.best_fq
+    dst.current_loss = src.best_loss
+    if src.best_loss < dst.best_loss:
+        dst.best_loss = src.best_loss
+        dst.best_transforms = src.best_transforms
+        dst.best_fq = src.best_fq
+    return True
+
+
+def elite_over_mesh(loss, axis_name: str):
+    """(global min loss, owning shard index) — call inside ``shard_map`` over
+    the data axis to pick the migration source across hosts."""
+    return argmin_allgather(jnp.asarray(loss, jnp.float32), axis_name)

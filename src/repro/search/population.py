@@ -1,0 +1,36 @@
+"""Population proposals: K candidates per step, one batched evaluation.
+
+The single-chain search spends one calibration forward per proposal; with a
+population of K the K candidate transforms for the sampled unit are built
+(unrolled at trace time — K is static) and the K fake-quant stacks are
+evaluated through ONE ``vmap``-batched forward→loss program, so the
+calibration batch streams through the model once per step instead of K
+times.
+
+Key discipline: ``candidate_keys(sub, 1)[0] == jax.random.split(sub)[0]``,
+i.e. a population of one consumes exactly the key the legacy loop consumed
+for its single proposal — this is what makes the K=1 trajectory reproduce
+the legacy hill climb bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["candidate_keys", "stack_trees", "take_tree"]
+
+
+def candidate_keys(sub: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(k, ...) proposal keys from the step key. ``k=1`` yields exactly the
+    legacy ``k_prop, _ = jax.random.split(sub)`` key."""
+    return jax.random.split(sub, k + 1)[:k]
+
+
+def stack_trees(trees):
+    """[pytree] * K -> pytree with a leading K axis on every leaf."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def take_tree(tree, i):
+    """Select index ``i`` (traced ok) along the leading axis of every leaf."""
+    return jax.tree.map(lambda x: x[i], tree)

@@ -9,9 +9,12 @@ The Pallas kernel behind the attention read lives in
 serving driver.
 """
 from repro.serving.paged_cache import PageAllocator, PagedKVCache, NULL_PAGE
-from repro.serving.decode import make_paged_decode_step, paged_attention_block
+from repro.serving.decode import (make_paged_decode_step,
+                                  paged_attention_block, sample_logits,
+                                  sample_step_keys)
 from repro.serving.batcher import ContinuousBatcher, PagedRequest
 
 __all__ = ["PageAllocator", "PagedKVCache", "NULL_PAGE",
            "make_paged_decode_step", "paged_attention_block",
+           "sample_logits", "sample_step_keys",
            "ContinuousBatcher", "PagedRequest"]

@@ -12,6 +12,12 @@ Unlike the dense step, positions are PER-SEQUENCE (``seq_lens`` (B,)) — the
 whole point of continuous batching is that batch slots sit at unrelated
 depths. Idle slots carry ``seq_len == 0`` and a null-page block table: their
 write lands in the reserved page and their attention output is fully masked.
+
+Token selection is greedy by default; ``temperature > 0`` switches the step
+to temperature / top-k sampling with PER-SEQUENCE RNG keys threaded through
+the jitted step (the key array is an extra step argument, so one compiled
+program serves every step and re-seeding a sequence is just handing it a new
+key row). Greedy steps keep the original 5-argument signature byte-for-byte.
 """
 from __future__ import annotations
 
@@ -24,7 +30,31 @@ from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.models.model import dequant_tree, embed_tokens
 
-__all__ = ["make_paged_decode_step", "paged_attention_block"]
+__all__ = ["make_paged_decode_step", "paged_attention_block", "sample_logits",
+           "sample_step_keys"]
+
+
+def sample_step_keys(key, batch: int):
+    """(B, 2) uint32 per-sequence keys for one sampling step."""
+    return jax.random.split(key, batch)
+
+
+def sample_logits(logits, keys, *, temperature: float, top_k: int = 0):
+    """Per-sequence temperature / top-k sampling.
+
+    logits (B, V); keys (B, 2) uint32 (one key row per sequence, e.g. from
+    ``sample_step_keys``). ``top_k > 0`` restricts sampling to the k highest
+    logits; ``temperature <= 0`` degenerates to greedy argmax. Returns (B,)
+    int32 — deterministic in (logits, keys).
+    """
+    logits = logits.astype(jnp.float32)
+    if top_k and top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
 
 
 def _write_token(pool, phys, slot, val):
@@ -62,13 +92,19 @@ def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
     return L.attn_out(p, out[:, None].astype(q.dtype), cfg), new
 
 
-def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True):
+def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True,
+                           temperature: float = 0.0, top_k: int = 0):
     """(params_q, tokens (B,1), pools, block_tables (B,P), seq_lens (B,))
     -> (next_token (B,1) int32, updated pools).
 
     ``pools`` leaves carry a leading n_layers axis and are scanned alongside
     the stacked layer params, exactly like the dense cache in
     ``model.decode_step``. Only attention-cache architectures page.
+
+    With ``temperature > 0`` the returned step takes one extra trailing
+    argument, ``sample_keys`` (B, 2) uint32 per-sequence keys, and samples
+    through ``sample_logits`` (optionally top-k-restricted); the default
+    greedy step keeps the original signature and argmax selection unchanged.
     """
     if cfg.block_pattern not in ("dense", "moe"):
         raise ValueError(f"paged decode requires attention blocks, "
@@ -76,7 +112,7 @@ def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True):
     if cfg.is_enc_dec:
         raise ValueError("paged decode does not cover cross-attention caches")
 
-    def step(params_q, tokens, pools, block_tables, seq_lens):
+    def logits_step(params_q, tokens, pools, block_tables, seq_lens):
         positions = seq_lens[:, None]
         h = embed_tokens(params_q, cfg, tokens, positions)
 
@@ -106,6 +142,21 @@ def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True):
         V = logits.shape[-1]
         if V > cfg.vocab_size:
             logits = jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -jnp.inf)
+        return logits, new_pools
+
+    if temperature > 0.0:
+        def sampled_step(params_q, tokens, pools, block_tables, seq_lens,
+                         sample_keys):
+            logits, new_pools = logits_step(params_q, tokens, pools,
+                                            block_tables, seq_lens)
+            next_tok = sample_logits(logits[:, -1], sample_keys,
+                                     temperature=temperature, top_k=top_k)
+            return next_tok[:, None], new_pools
+        return sampled_step
+
+    def step(params_q, tokens, pools, block_tables, seq_lens):
+        logits, new_pools = logits_step(params_q, tokens, pools, block_tables,
+                                        seq_lens)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return next_tok, new_pools
 

@@ -165,3 +165,96 @@ def test_flash_decode_int8_cache():
     # and the int8 path approximates the fp path
     dense = flash_decode_ref(q, kf, vf)
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Fused transform+fake-quant (the population search's per-proposal hot path)
+# ---------------------------------------------------------------------------
+
+def _random_transform(f, seed=0, identity=False):
+    import repro.core.invariance as inv
+    if identity:
+        t = inv.identity_transform(f)
+        return t.pi, t.s, t.phi
+    pi = jax.random.permutation(jax.random.PRNGKey(seed), f).astype(jnp.int32)
+    s = 1.0 + 0.05 * jax.random.normal(jax.random.PRNGKey(seed + 1), (f,))
+    phi = 1e-2 * jax.random.normal(jax.random.PRNGKey(seed + 2), (f // 2,))
+    return pi, s, phi
+
+
+@pytest.mark.parametrize("mode", ["up", "down"])
+@pytest.mark.parametrize("bits,group", [(2, 16), (2, 32), (4, 32), (3, 16)])
+@pytest.mark.parametrize("D,F", [(64, 128), (128, 64), (96, 96)])
+def test_transform_quant_sweep(mode, bits, group, D, F):
+    """Fused kernel == materialize-then-quantize oracle to <=1e-5 in
+    interpret mode across shapes / group sizes / modes (ISSUE 3 bar)."""
+    from repro.kernels import transform_quant
+    from repro.kernels.ref import transform_quant_ref
+    K = D if mode == "up" else F
+    if K % group:
+        pytest.skip("group must divide the quant (K) axis")
+    shape = (D, F) if mode == "up" else (F, D)
+    w = jax.random.normal(jax.random.PRNGKey(D + F + bits), shape)
+    f = F
+    pi, s, phi = _random_transform(f, seed=bits)
+    out = transform_quant(w, pi, s, phi, bits=bits, group=group, mode=mode)
+    want = transform_quant_ref(w, pi, s, phi, bits=bits, group=group, mode=mode)
+    for o, wt in zip(out, want):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(wt),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["up", "down"])
+def test_transform_quant_identity_is_plain_fake_quant(mode):
+    """Identity (pi, s, phi) must reduce to the plain group fake-quant
+    roundtrip — ties the fused kernel to core.quant.fake_quant exactly."""
+    from repro.core.quant import fake_quant
+    from repro.kernels import transform_quant
+    D, F, group = 64, 128, 32
+    shape = (D, F) if mode == "up" else (F, D)
+    w = jax.random.normal(jax.random.PRNGKey(9), shape)
+    pi, s, phi = _random_transform(F, identity=True)
+    fq, _, _ = transform_quant(w, pi, s, phi, bits=2, group=group, mode=mode)
+    want = fake_quant(w, QuantConfig(bits=2, group_size=group))
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_transform_quant_matches_apply_transform_ffn():
+    """Kernel pair (up, down) == inv.apply_transform_ffn + fake_quant on a
+    real FFN weight pair (the exact computation the search engine fuses)."""
+    import repro.core.invariance as inv
+    from repro.core.quant import fake_quant
+    from repro.kernels import transform_quant
+    D, F, group = 64, 128, 32
+    w_up = jax.random.normal(jax.random.PRNGKey(0), (D, F))
+    w_down = jax.random.normal(jax.random.PRNGKey(1), (F, D))
+    pi, s, phi = _random_transform(F, seed=42)
+    t = inv.FFNTransform(pi=pi, s=s, phi=phi)
+    up_t, down_t, _, _, _ = inv.apply_transform_ffn(t, w_up, w_down)
+    qcfg = QuantConfig(bits=2, group_size=group)
+    got_up = transform_quant(w_up, pi, s, phi, bits=2, group=group, mode="up")[0]
+    got_down = transform_quant(w_down, pi, s, phi, bits=2, group=group,
+                               mode="down")[0]
+    np.testing.assert_allclose(np.asarray(got_up),
+                               np.asarray(fake_quant(up_t, qcfg)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_down),
+                               np.asarray(fake_quant(down_t, qcfg)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_transform_quant_ref_fallback_on_untileable_shapes():
+    """A down-mode N that cannot column-tile (192 > 128, not a multiple)
+    must silently fall back to the jnp reference — same contract as the
+    other ops.py wrappers."""
+    from repro.kernels import transform_quant
+    from repro.kernels.ref import transform_quant_ref
+    F, D, group = 64, 192, 32
+    w = jax.random.normal(jax.random.PRNGKey(2), (F, D))
+    pi, s, phi = _random_transform(F, seed=3)
+    out = transform_quant(w, pi, s, phi, bits=2, group=group, mode="down")
+    want = transform_quant_ref(w, pi, s, phi, bits=2, group=group, mode="down")
+    for o, wt in zip(out, want):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(wt),
+                                   rtol=1e-5, atol=1e-5)

@@ -306,3 +306,119 @@ def test_paged_step_lowers_from_dryrun_structs(kv_dtype):
     tok_s, pools_s = jax.eval_shape(make_paged_serve_step(cfg), *args)
     assert tok_s.shape == (B, 1)
     assert jax.tree.structure(pools_s) == jax.tree.structure(pools)
+
+
+# ---------------------------------------------------------------------------
+# Dead-page skipping (pl.when on page index vs sequence length)
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_short_seqs_deep_pool_equivalence():
+    """Short sequences in DEEP pools (many dead block-table slots) — the
+    skip path (compute gated by pl.when, dead slots clamped to the last live
+    page so no fresh DMA is issued) must be exactly equivalent to the dense
+    oracle, including a one-token sequence in a 16-page table."""
+    psz, P, B, H, Dh = 8, 16, 4, 4, 16
+    q, kp, vp, bt, _, _, _ = _random_paged(
+        21, B=B, H=H, Hkv=H, Dh=Dh, page_size=psz, n_pages=B * P + 1,
+        max_pages=P)
+    lens = jnp.asarray([1, psz, psz + 3, P * psz], jnp.int32)  # 1..full
+    out = paged_decode(q, kp, vp, bt, lens)
+    want = paged_decode_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # partials too (the dist merge contract must see identical (acc, m, l))
+    acc, m, l = paged_decode(q, kp, vp, bt, lens, normalize=False)
+    acc_r, m_r, l_r = paged_decode_ref(q, kp, vp, bt, lens, normalize=False)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_r), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_r), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_r), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_paged_decode_skipped_pages_never_read():
+    """Poison every PHYSICAL page beyond each sequence's live count with NaN:
+    the skip path must never let a NaN reach the output (NaN would survive
+    any masking arithmetic, unlike the masked-softmax zeros)."""
+    psz, P, B, H = 4, 8, 2, 2
+    q, kp, vp, bt, _, _, _ = _random_paged(
+        13, B=B, H=H, Hkv=H, Dh=8, page_size=psz, n_pages=B * P + 1,
+        max_pages=P)
+    lens = jnp.asarray([3, 2 * psz], jnp.int32)
+    want = paged_decode(q, kp, vp, bt, lens)
+    kp2, vp2 = kp, vp
+    for b in range(B):
+        n_live = -(-int(lens[b]) // psz)
+        for p in range(n_live, P):
+            pg = int(bt[b, p])
+            kp2 = kp2.at[pg].set(jnp.nan)
+            vp2 = vp2.at[pg].set(jnp.nan)
+    out = paged_decode(q, kp2, vp2, bt, lens)
+    assert not bool(jnp.any(jnp.isnan(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sampling (temperature / top-k) in the paged decode step
+# ---------------------------------------------------------------------------
+
+def test_sampling_step_seeded_determinism(packed_tiny):
+    """Same per-sequence keys => identical sampled tokens; different keys
+    may differ; greedy step signature/output stays byte-identical."""
+    from repro.serving import (make_paged_decode_step, sample_step_keys,
+                               PagedKVCache)
+    cfg, params_q = packed_tiny
+    cache = PagedKVCache(cfg, n_pages=16, page_size=8, max_pages_per_seq=4)
+    B, P = 2, 4
+    ids = cache.allocator.alloc(B * P)
+    bt = jnp.asarray(np.asarray(ids).reshape(B, P), jnp.int32)
+    lens = jnp.asarray([5, 9], jnp.int32)
+    toks = jnp.asarray([[7], [11]], jnp.int32)
+    greedy = jax.jit(make_paged_decode_step(cfg))
+    sampled = jax.jit(make_paged_decode_step(cfg, temperature=0.8, top_k=8))
+    keys = sample_step_keys(jax.random.PRNGKey(42), B)
+    t1, _ = sampled(params_q, toks, cache.pools, bt, lens, keys)
+    t2, _ = sampled(params_q, toks, cache.pools, bt, lens, keys)
+    assert np.array_equal(np.asarray(t1), np.asarray(t2)), "seeded => identical"
+    assert t1.shape == (B, 1) and t1.dtype == jnp.int32
+    assert bool(jnp.all((t1 >= 0) & (t1 < cfg.vocab_size)))
+    # greedy default: unchanged 5-arg signature and argmax selection
+    tg, _ = greedy(params_q, toks, cache.pools, bt, lens)
+    assert tg.shape == (B, 1)
+
+
+def test_sampling_cold_temperature_is_greedy(packed_tiny):
+    """T->0 and top_k=1 must both reproduce the greedy argmax exactly."""
+    from repro.serving import (make_paged_decode_step, sample_step_keys,
+                               PagedKVCache)
+    cfg, params_q = packed_tiny
+    cache = PagedKVCache(cfg, n_pages=16, page_size=8, max_pages_per_seq=4)
+    B, P = 2, 4
+    ids = cache.allocator.alloc(B * P)
+    bt = jnp.asarray(np.asarray(ids).reshape(B, P), jnp.int32)
+    lens = jnp.asarray([4, 7], jnp.int32)
+    toks = jnp.asarray([[3], [5]], jnp.int32)
+    keys = sample_step_keys(jax.random.PRNGKey(0), B)
+    tg, _ = jax.jit(make_paged_decode_step(cfg))(
+        params_q, toks, cache.pools, bt, lens)
+    t_cold, _ = jax.jit(make_paged_decode_step(cfg, temperature=1e-6))(
+        params_q, toks, cache.pools, bt, lens, keys)
+    t_top1, _ = jax.jit(make_paged_decode_step(cfg, temperature=5.0, top_k=1))(
+        params_q, toks, cache.pools, bt, lens, keys)
+    assert np.array_equal(np.asarray(tg), np.asarray(t_cold))
+    assert np.array_equal(np.asarray(tg), np.asarray(t_top1))
+
+
+def test_sample_logits_top_k_support():
+    """top-k sampling never leaves the k highest logits."""
+    from repro.serving import sample_logits, sample_step_keys
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)),
+                         jnp.float32)
+    top_rows = np.argsort(np.asarray(logits), axis=-1)[:, -8:]
+    for seed in range(5):
+        keys = sample_step_keys(jax.random.PRNGKey(seed), 4)
+        toks = sample_logits(logits, keys, temperature=3.0, top_k=8)
+        for b in range(4):
+            assert int(toks[b]) in set(top_rows[b].tolist())
