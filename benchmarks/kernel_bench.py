@@ -108,6 +108,78 @@ def run():
         record(f"kernel/paged_decode/B{B}xH{H}xD{Dh}p{psz}", us,
                f"capacity_vs_live_pages={cap_pages/max(live_pages, 1):.2f}x")
 
+    # fused-GQA paged decode: the per-query-head grid DMAs each KV head's
+    # page ``rep = H // Hkv`` times per decode token; the (B, Hkv, P) fused
+    # grid loads it ONCE and batches the group's query heads against it in
+    # VMEM. ``derived``: the KV-page HBM read cut (the decode-dominant term).
+    # CPU proxy: repeat-KV-to-H-heads oracle vs a grouped einsum that never
+    # repeats the pool.
+    for (B, H, Hkv, Dh, psz, max_pages) in [(8, 8, 2, 64, 16, 8),
+                                            (8, 16, 4, 64, 16, 8)]:
+        rep = H // Hkv
+        n_pages = B * max_pages + 1
+        kp = jax.random.normal(key, (n_pages, psz, Hkv, Dh))
+        vp = jax.random.normal(key, (n_pages, psz, Hkv, Dh))
+        q = jax.random.normal(key, (B, H, Dh))
+        bt = jnp.asarray(
+            1 + np.arange(B * max_pages).reshape(B, max_pages), jnp.int32)
+        lens = jnp.full((B,), max_pages * psz, jnp.int32)
+        unfused = jax.jit(lambda q, kp, vp, bt, lens: paged_decode_ref(
+            q, kp, vp, bt, lens))
+
+        def gqa_grouped_ref(q, kp, vp, bt, lens):
+            # read each KV head once; queries grouped (B, Hkv, rep, Dh)
+            Bq, Hq, D = q.shape
+            P, ps = bt.shape[1], kp.shape[1]
+            kf = kp[bt].reshape(Bq, P * ps, Hkv, D)
+            vf = vp[bt].reshape(Bq, P * ps, Hkv, D)
+            qg = q.reshape(Bq, Hkv, Hq // Hkv, D)
+            s = jnp.einsum("bgrd,bsgd->bgrs", qg, kf) * D ** -0.5
+            mask = jnp.arange(P * ps)[None, :] < lens[:, None]
+            s = jnp.where(mask[:, None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bgrs,bsgd->bgrd", p, vf).reshape(Bq, Hq, D)
+
+        fused = jax.jit(gqa_grouped_ref)
+        jax.block_until_ready(unfused(q, kp, vp, bt, lens))
+        jax.block_until_ready(fused(q, kp, vp, bt, lens))
+        _, us_u = timed(lambda: jax.block_until_ready(
+            unfused(q, kp, vp, bt, lens)), repeat=5)
+        _, us_f = timed(lambda: jax.block_until_ready(
+            fused(q, kp, vp, bt, lens)), repeat=5)
+        record(f"kernel/paged_decode_gqa/H{H}kv{Hkv}/unfused", us_u,
+               f"kv_page_reads_per_token={H}")
+        record(f"kernel/paged_decode_gqa/H{H}kv{Hkv}/fused", us_f,
+               f"kv_page_reads_per_token={Hkv}_of_{H}={rep}x_cut="
+               f"{us_u / max(us_f, 1e-9):.2f}x_cpu")
+
+    # chunked paged prefill: prompt K/V written straight into pages, chunk
+    # attention streamed page-by-page from the pool. ``derived``: admit
+    # tokens/sec through the attention path plus the copy the v1 admit no
+    # longer pays (contiguous prefill + write_prefill scatter re-touched
+    # every prompt KV byte once more).
+    from repro.serving.prefill import paged_prefill_attention
+    for (plen, psz, H, Dh, chunk_pages) in [(256, 16, 8, 64, 4),
+                                            (512, 32, 8, 64, 4)]:
+        n_pages = plen // psz + 1
+        pools = {"k": jax.random.normal(key, (n_pages, psz, H, Dh)),
+                 "v": jax.random.normal(key, (n_pages, psz, H, Dh))}
+        bt = jnp.asarray(1 + np.arange(plen // psz), jnp.int32)[None]
+        C = chunk_pages * psz
+        f = jax.jit(lambda q, pools, bt, off: paged_prefill_attention(
+            q, pools, bt, off))
+        q = jax.random.normal(key, (1, C, H, Dh))
+        jax.block_until_ready(f(q, pools, bt, jnp.int32(0)))
+        def run_chunks():
+            for off in range(0, plen, C):
+                jax.block_until_ready(f(q, pools, bt, jnp.int32(off)))
+        _, us = timed(run_chunks, repeat=3)
+        toks_per_s = plen / (us * 1e-6)
+        kv_bytes = 2 * plen * H * Dh * 4
+        record(f"kernel/paged_prefill/S{plen}p{psz}c{chunk_pages}", us,
+               f"prefill_toks_per_s={toks_per_s:.0f};"
+               f"admit_copy_bytes_saved={kv_bytes}")
+
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "BENCH_kernels.json").write_text(json.dumps(rows, indent=1))
     return rows

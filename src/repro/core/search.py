@@ -295,19 +295,44 @@ def make_adapter(cfg: ModelConfig, phase: str = None):
     raise NotImplementedError(f"no search adapter for pattern {cfg.block_pattern!r}")
 
 
+def _merge_phase_stats(s1, s2):
+    """Sum the counters of two engine stats dicts; rates recombine so the
+    merged proposals_per_sec reflects TOTAL proposals over TOTAL wall time."""
+    if s1 is None or s2 is None:
+        return s2 or s1
+    out = dict(s2)
+    for k in ("migrations", "uphill_accepts", "proposals"):
+        out[k] = s1.get(k, 0) + s2.get(k, 0)
+    t1 = s1.get("proposals", 0) / max(s1.get("proposals_per_sec", 0.0), 1e-9)
+    t2 = s2.get("proposals", 0) / max(s2.get("proposals_per_sec", 0.0), 1e-9)
+    out["proposals_per_sec"] = out["proposals"] / max(t1 + t2, 1e-9)
+    out["fused"] = s1.get("fused", False) or s2.get("fused", False)
+    return out
+
+
 def run_search_hybrid(params_fp, params_base, cfg, qcfg, calib_tokens,
                       scfg: SearchConfig = SearchConfig(), forward_kwargs=None):
     """Hybrid (Zamba2) InvarExplore: phase 1 hill-climbs the Mamba blocks'
     within-head permutations; phase 2 hill-climbs the shared FFN's P/S/R,
-    starting from phase 1's quantized model."""
-    half = dataclasses.replace(scfg, steps=scfg.steps // 2)
-    r1 = run_search(params_fp, params_base, cfg, qcfg, calib_tokens, half,
+    starting from phase 1's quantized model. Phase 2 runs the REMAINDER
+    ``steps - steps // 2`` so an odd budget is spent in full, and the
+    returned histories/stats merge both phases."""
+    n1 = scfg.steps // 2
+    n2 = scfg.steps - n1
+    r1 = run_search(params_fp, params_base, cfg, qcfg, calib_tokens,
+                    dataclasses.replace(scfg, steps=n1),
                     adapter=MambaAdapter(cfg), forward_kwargs=forward_kwargs)
-    r2 = run_search(params_fp, r1.params_q, cfg, qcfg, calib_tokens, half,
+    r2 = run_search(params_fp, r1.params_q, cfg, qcfg, calib_tokens,
+                    dataclasses.replace(scfg, steps=n2),
                     adapter=SharedFFNAdapter(cfg), forward_kwargs=forward_kwargs)
     r2.history = r1.history + r2.history
     r2.initial_loss = r1.initial_loss
-    r2.accept_rate = (r1.accept_rate + r2.accept_rate) / 2
+    r2.accept_rate = (r1.accept_rate * n1 + r2.accept_rate * n2) \
+        / max(scfg.steps, 1)
+    if r1.island_histories and r2.island_histories:
+        r2.island_histories = [h1 + h2 for h1, h2 in
+                               zip(r1.island_histories, r2.island_histories)]
+    r2.stats = _merge_phase_stats(r1.stats, r2.stats)
     return r2
 
 

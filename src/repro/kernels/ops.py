@@ -15,7 +15,8 @@ from repro.kernels import ref
 from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.group_quant import group_quant_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
-from repro.kernels.paged_decode import paged_decode_pallas
+from repro.kernels.paged_decode import (paged_decode_gqa_pallas,
+                                        paged_decode_pallas)
 from repro.kernels.transform_quant import transform_quant_pallas
 
 __all__ = ["quant_matmul", "group_quant", "flash_decode", "paged_decode",
@@ -75,20 +76,34 @@ def flash_decode(q, k, v, k_scale=None, v_scale=None, *, kv_len=None,
                                chunk=chunk, interpret=not on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("normalize", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("normalize", "use_pallas",
+                                             "fused_gqa"))
 def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, k_scale=None,
-                 v_scale=None, *, normalize: bool = True, use_pallas: bool = True):
+                 v_scale=None, *, normalize: bool = True,
+                 use_pallas: bool = True, fused_gqa: bool = True):
     """Paged one-token decode attention over a block-table page pool.
 
     The continuous-batching hot path: q (B, H, Dh) attends over the pages
     named by ``block_tables`` (B, P) in the global (N, page_size, Hkv, Dh)
     pool, masked to per-sequence ``seq_lens``. ``normalize=False`` returns
     the (acc, m, l) partials for the cross-shard LSE merge.
+
+    With ``fused_gqa`` (the default) GQA shapes (H > Hkv) route to the
+    (B, Hkv, P)-grid kernel that loads each KV head's page once for its
+    whole query-head group — decode HBM reads drop by the GQA ratio. MHA
+    shapes (H == Hkv) always use the per-query-head grid, so pre-GQA callers
+    see bit-identical outputs.
     """
     if not use_pallas:
         return ref.paged_decode_ref(q, k_pages, v_pages, block_tables,
                                     seq_lens, k_scale, v_scale,
                                     normalize=normalize)
+    H, Hkv = q.shape[1], k_pages.shape[2]
+    if fused_gqa and H > Hkv and H % Hkv == 0:
+        return paged_decode_gqa_pallas(q, k_pages, v_pages, block_tables,
+                                       seq_lens, k_scale, v_scale,
+                                       normalize=normalize,
+                                       interpret=not on_tpu())
     return paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
                                k_scale, v_scale, normalize=normalize,
                                interpret=not on_tpu())

@@ -22,6 +22,17 @@ per page. With ``normalize=False`` the kernel returns the raw partial stats
 (acc, m, l) instead of the normalized output — the exact log-sum-exp partials
 ``repro.dist.attention.merge_partials`` merges across sequence shards, so a
 sequence-sharded cache can be paged per shard.
+
+Two grids cover the GQA axis:
+
+- ``paged_decode_pallas`` — grid (B, H, P): one query head per grid step.
+  Under GQA every query head re-DMAs its KV head's page, so each live page
+  crosses HBM→VMEM ``rep = H // Hkv`` times per token.
+- ``paged_decode_gqa_pallas`` — grid (B, Hkv, P): one KV HEAD per grid step.
+  The page is loaded ONCE and all ``rep`` query heads of the group are
+  batched against it in VMEM ((rep, psz) score tile on the MXU), cutting
+  decode's dominant HBM term — KV page reads — by the GQA ratio. Query heads
+  are grouped h // rep = KV head, so the (1, rep, Dh) q block is contiguous.
 """
 from __future__ import annotations
 
@@ -32,7 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["paged_decode_pallas"]
+__all__ = ["paged_decode_pallas", "paged_decode_gqa_pallas"]
 
 NEG = -1e30
 
@@ -142,6 +153,118 @@ def paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
     out, m, l = pl.pallas_call(
         functools.partial(_kernel, page_size=page_size, quantized=quantized,
                           normalize=normalize),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages, k_scale, v_scale)
+    if normalize:
+        return out
+    return out, m, l
+
+
+def _kernel_gqa(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                o_ref, m_ref, l_ref, *, page_size, quantized, normalize):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    # same dead-page skip as the per-query-head kernel: pages at or past
+    # ceil(seq_len / page_size) contribute exactly zero, and the index maps
+    # clamp their block index so the skipped steps issue no fresh DMA.
+    n_live = jnp.maximum((sl_ref[b] + page_size - 1) // page_size, 1)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(p < n_live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (rep, Dh)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)       # (page_size, Dh)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            kb = kb * ks_ref[0, :, 0][:, None].astype(jnp.float32)
+            vb = vb * vs_ref[0, :, 0][:, None].astype(jnp.float32)
+
+        dh = q.shape[-1]
+        # ONE page read serves the whole query-head group: (rep, page_size)
+        s = (q @ kb.T) * (dh ** -0.5)
+        pos = p * page_size + jax.lax.iota(jnp.int32, page_size)
+        mask = pos < sl_ref[b]
+        s = jnp.where(mask[None, :], s, NEG)
+
+        m_prev = m_ref[0]                                # (rep,)
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        prob = jnp.where(mask[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        o_ref[0] = o_ref[0] * corr[:, None] + prob @ vb
+        m_ref[0] = m_new
+        l_ref[0] = l_prev * corr + jnp.sum(prob, axis=-1)
+
+    if normalize:
+        @pl.when(p == pl.num_programs(2) - 1)
+        def _finish():
+            o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def paged_decode_gqa_pallas(q, k_pages, v_pages, block_tables, seq_lens,
+                            k_scale=None, v_scale=None, *,
+                            normalize: bool = True, interpret: bool = False):
+    """Fused-GQA paged decode: same contract as ``paged_decode_pallas``
+    (q (B, H, Dh) over (N, page_size, Hkv, Dh) pools, block-table gather,
+    optional int8 scales, optional LSE partials) with a (B, Hkv, P) grid —
+    each KV head's page is DMA'd once and its ``H // Hkv`` query heads are
+    reduced against it in VMEM.
+    """
+    B, H, Dh = q.shape
+    n_pages, page_size, Hkv, _ = k_pages.shape
+    P = block_tables.shape[1]
+    if H % Hkv != 0:
+        raise ValueError(f"H={H} not a multiple of Hkv={Hkv}")
+    rep = H // Hkv
+    quantized = k_scale is not None
+    if not quantized:
+        k_scale = jnp.ones((n_pages, page_size, Hkv), jnp.float32)
+        v_scale = jnp.ones((n_pages, page_size, Hkv), jnp.float32)
+
+    def _live_page(bt, sl, b, p):
+        n_live = jnp.maximum((sl[b] + page_size - 1) // page_size, 1)
+        return bt[b, jnp.minimum(p, n_live - 1)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            # q block = the KV head's whole query-head group (contiguous
+            # because query head h belongs to KV head h // rep)
+            pl.BlockSpec((1, rep, Dh), lambda b, g, p, bt, sl: (b, g, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, g, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  g, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, g, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  g, 0)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda b, g, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  g)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda b, g, p, bt, sl: (_live_page(bt, sl, b, p), 0,
+                                                  g)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rep, Dh), lambda b, g, p, bt, sl: (b, g, 0)),
+            pl.BlockSpec((1, rep), lambda b, g, p, bt, sl: (b, g)),
+            pl.BlockSpec((1, rep), lambda b, g, p, bt, sl: (b, g)),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel_gqa, page_size=page_size,
+                          quantized=quantized, normalize=normalize),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),

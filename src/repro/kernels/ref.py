@@ -36,6 +36,12 @@ def paged_decode_ref(q, k_pages, v_pages, block_tables, seq_lens,
     (N, page_size, Hkv)]; block_tables (B, P) int32; seq_lens (B,) int32.
     Returns (B, H, Dh), or the (acc, m, l) log-sum-exp partials when
     ``normalize=False`` (the dist merge contract).
+
+    The ONE oracle for both paged-decode grids: the per-query-head kernel
+    and the fused-GQA (B, Hkv, P) variant compute the same math, so
+    ``paged_decode_gqa_pallas`` parity is pinned against this function
+    (``repeat``-ing KV to H heads here IS the unfused read pattern the
+    fused grid eliminates).
     """
     B, H, Dh = q.shape
     _, page_size, Hkv, _ = k_pages.shape

@@ -38,6 +38,9 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new: int = 32
     out: Optional[list] = None
+    temperature: float = 0.0        # <= 0: greedy (paged server only)
+    top_k: int = 0                  # 0: unrestricted
+    seed: int = 0                   # per-request sample stream
 
 
 class BatchedServer:
@@ -93,7 +96,7 @@ class PagedServer:
 
     def __init__(self, params_q, cfg, max_batch: int = 4, page_size: int = 16,
                  n_pages: Optional[int] = None, max_len: int = 512,
-                 use_pallas: bool = True):
+                 use_pallas: bool = True, prefill_chunk_pages: int = 4):
         pages_per_seq = -(-max_len // page_size)
         if n_pages is None:
             n_pages = max_batch * pages_per_seq + 1  # +1 null page
@@ -102,11 +105,13 @@ class PagedServer:
                                   max_pages_per_seq=pages_per_seq)
         self.batcher = ContinuousBatcher(params_q, cfg, self.cache,
                                          max_batch=max_batch,
-                                         use_pallas=use_pallas)
+                                         use_pallas=use_pallas,
+                                         prefill_chunk_pages=prefill_chunk_pages)
 
     def generate(self, requests: List[Request]):
         paged = [PagedRequest(prompt=np.asarray(r.prompt, np.int32),
-                              max_new=r.max_new) for r in requests]
+                              max_new=r.max_new, temperature=r.temperature,
+                              top_k=r.top_k, seed=r.seed) for r in requests]
         return self.batcher.run(paged)
 
 
@@ -122,6 +127,11 @@ def main():
     ap.add_argument("--pages", type=int, default=None,
                     help="total page-pool size (default: batch x max_len/page)")
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--prefill-chunk-pages", type=int, default=4,
+                    help="pages per paged-prefill chunk (admit granularity)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--legacy", action="store_true",
                     help="fixed-slot BatchedServer instead of the paged path")
     args = ap.parse_args()
@@ -137,15 +147,17 @@ def main():
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)).astype(np.int32),
-                    max_new=args.max_new)
-            for _ in range(args.requests)]
+                    max_new=args.max_new, temperature=args.temperature,
+                    top_k=args.top_k, seed=i)
+            for i in range(args.requests)]
     if args.legacy:
         server = BatchedServer(params_q, cfg, batch_size=args.batch,
                                max_len=args.max_len)
     else:
         server = PagedServer(params_q, cfg, max_batch=args.batch,
                              page_size=args.page_size, n_pages=args.pages,
-                             max_len=args.max_len)
+                             max_len=args.max_len,
+                             prefill_chunk_pages=args.prefill_chunk_pages)
         pool = server.cache.pool_bytes()
         dense = server.cache.dense_equiv_bytes(args.batch, args.max_len)
         print(f"[serve] page pool: {server.cache.n_pages} x "

@@ -25,9 +25,9 @@ from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_sche
 from repro.quantized.qmodel import pack_model
 
 __all__ = ["SHAPES", "shape_applicable", "make_train_step", "make_serve_step",
-           "make_paged_serve_step", "make_prefill_step", "input_specs",
-           "param_structs", "opt_structs", "qparam_structs", "cache_structs",
-           "paged_pool_structs"]
+           "make_paged_serve_step", "make_paged_prefill_chunk_step",
+           "make_prefill_step", "input_specs", "param_structs", "opt_structs",
+           "qparam_structs", "cache_structs", "paged_pool_structs"]
 
 
 SHAPES = {
@@ -118,6 +118,15 @@ def make_paged_serve_step(cfg: ModelConfig):
     (attention over the block-table page pool, per-sequence positions)."""
     from repro.serving.decode import make_paged_decode_step
     return make_paged_decode_step(cfg)
+
+
+def make_paged_prefill_chunk_step(cfg: ModelConfig):
+    """(params_q, tokens(1,C), pools, block_tables(1,P), offset())
+    -> (logits(1,C,V), pools) — the chunked paged-prefill admit step (C a
+    page multiple; one compiled program per chunk length, shared across
+    admits)."""
+    from repro.serving.prefill import make_paged_prefill_step
+    return make_paged_prefill_step(cfg)
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int):

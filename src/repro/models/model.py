@@ -20,7 +20,7 @@ from repro.models import ssm as SSM
 
 __all__ = [
     "init_params", "forward", "lm_loss", "init_cache", "decode_step",
-    "prefill", "dequant_tree", "quantizable_paths",
+    "prefill", "dequant_tree", "lm_head_logits", "quantizable_paths",
 ]
 
 
@@ -184,6 +184,27 @@ def embed_tokens(params, cfg: ModelConfig, tokens, positions):
     return h.astype(jnp.dtype(cfg.compute_dtype))
 
 
+def lm_head_logits(params, cfg: ModelConfig, h, *, mask_vocab: bool = False):
+    """Final norm + (tied or dedicated, possibly QTensor) LM head.
+
+    The one implementation every decode path shares — forward / decode_step /
+    prefill here plus the paged serving steps in ``repro.serving``.
+    ``mask_vocab=True`` sets padded-vocab columns to -inf (the serving steps'
+    convention before argmax/sampling).
+    """
+    h = L.apply_norm(h, params["final_norm"], cfg.norm)
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    if isinstance(head, QTensor):
+        head = head.dequantize(h.dtype)
+    logits = h @ head.astype(h.dtype)
+    if mask_vocab:
+        V = logits.shape[-1]
+        if V > cfg.vocab_size:
+            logits = jnp.where(jnp.arange(V) < cfg.vocab_size, logits,
+                               -jnp.inf)
+    return logits
+
+
 def _run_encoder(params, cfg: ModelConfig, enc_embeds):
     h = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
     positions = jnp.arange(h.shape[1])
@@ -225,11 +246,7 @@ def forward(params, cfg: ModelConfig, tokens, *, enc_embeds=None, vision_embeds=
     else:
         raise ValueError(cfg.block_pattern)
 
-    h = L.apply_norm(h, params["final_norm"], cfg.norm)
-    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
-    if isinstance(head, QTensor):
-        head = head.dequantize(h.dtype)
-    logits = h @ head.astype(h.dtype)
+    logits = lm_head_logits(params, cfg, h)
     if collect_hidden:
         return logits, hidden
     return logits
@@ -355,12 +372,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, index):
     else:
         raise ValueError(cfg.block_pattern)
 
-    h = L.apply_norm(h, params["final_norm"], cfg.norm)
-    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
-    if isinstance(head, QTensor):
-        head = head.dequantize(h.dtype)
-    logits = h @ head.astype(h.dtype)
-    return logits, new_cache
+    return lm_head_logits(params, cfg, h), new_cache
 
 
 def _hybrid_decode(params, cfg: ModelConfig, h, positions, cache, index):
@@ -453,12 +465,7 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int, *, enc_embeds=None,
     else:
         raise ValueError(cfg.block_pattern)
 
-    h = L.apply_norm(h, params["final_norm"], cfg.norm)
-    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
-    if isinstance(head, QTensor):
-        head = head.dequantize(h.dtype)
-    logits = h @ head.astype(h.dtype)
-    return logits, new_cache
+    return lm_head_logits(params, cfg, h), new_cache
 
 
 def _hybrid_prefill(params, cfg: ModelConfig, h, positions, max_len: int):

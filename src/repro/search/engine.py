@@ -28,6 +28,7 @@ designed-for multi-host path, not yet wired (ROADMAP).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -76,7 +77,12 @@ def run_population_search(
     n_islands = max(int(getattr(scfg, "islands", 1)), 1)
     migrate_every = int(getattr(scfg, "migrate_every", 0))
     fused = bool(getattr(scfg, "fused_kernel", False))
-    fused = fused and hasattr(adapter, "transform_quant_unit")
+    if fused and not hasattr(adapter, "transform_quant_unit"):
+        warnings.warn(
+            f"fused_kernel=True but adapter {type(adapter).__name__} has no "
+            f"transform_quant_unit; falling back to the unfused "
+            f"transform->quantize path", stacklevel=2)
+        fused = False
 
     base = adapter.base_stack(params_base)
     proposer = getattr(adapter, "propose", None) or (
@@ -161,7 +167,7 @@ def run_population_search(
             best_fq=fq0, history=[(0, loss0, ce0, float(mse0), True)]))
 
     stats = {"migrations": 0, "uphill_accepts": 0,
-             "proposals": scfg.steps * K * n_islands}
+             "proposals": scfg.steps * K * n_islands, "fused": fused}
     t_start = time.time()
     for step in range(1, scfg.steps + 1):
         T = schedule(step)
@@ -175,7 +181,11 @@ def run_population_search(
             uniform = isl.rng.random() if T > 0.0 else None
             accepted = anneal.accept(delta, T, uniform)
             if accepted:
-                stats["uphill_accepts"] += delta >= 0.0
+                # strictly-worse moves only (delta == 0 is lateral, not
+                # uphill), counted as a Python int — not an accumulated
+                # numpy bool
+                if delta > 0.0:
+                    stats["uphill_accepts"] += 1
                 isl.current_loss = loss
                 isl.fq_stack = fq_new
                 isl.transforms = _tree_update(isl.transforms, u, t_new)

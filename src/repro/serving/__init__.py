@@ -1,20 +1,27 @@
 """Paged KV-cache serving subsystem (continuous batching).
 
 - ``paged_cache``: fixed-size page pool, free-list allocator, block tables
-- ``decode``: jit-able paged decode step (scatter-write + paged attention)
+- ``prefill``: chunked paged prefill (prompt K/V written straight into pages)
+- ``decode``: jit-able paged decode step (scatter-write + paged attention,
+  per-request sampling params threaded as (B,) arrays)
 - ``batcher``: admit / evict / reclaim scheduler between decode steps
 
-The Pallas kernel behind the attention read lives in
-``repro.kernels.paged_decode``; ``launch/serve.py`` wraps this package as the
-serving driver.
+The Pallas kernels behind the attention read live in
+``repro.kernels.paged_decode`` (including the fused-GQA variant that reads
+each KV head's page once for all of its query heads); ``launch/serve.py``
+wraps this package as the serving driver.
 """
 from repro.serving.paged_cache import PageAllocator, PagedKVCache, NULL_PAGE
 from repro.serving.decode import (make_paged_decode_step,
-                                  paged_attention_block, sample_logits,
+                                  paged_attention_block, request_key,
+                                  sample_logits, sample_logits_per_seq,
                                   sample_step_keys)
+from repro.serving.prefill import (make_paged_prefill_step,
+                                   paged_prefill_attention)
 from repro.serving.batcher import ContinuousBatcher, PagedRequest
 
 __all__ = ["PageAllocator", "PagedKVCache", "NULL_PAGE",
            "make_paged_decode_step", "paged_attention_block",
-           "sample_logits", "sample_step_keys",
-           "ContinuousBatcher", "PagedRequest"]
+           "make_paged_prefill_step", "paged_prefill_attention",
+           "request_key", "sample_logits", "sample_logits_per_seq",
+           "sample_step_keys", "ContinuousBatcher", "PagedRequest"]

@@ -6,11 +6,14 @@ slots were sized for ``max_len`` regardless of use. The batcher replaces that
 with the production loop:
 
   admit     between decode steps, free batch slots are filled from the queue:
-            the prompt is prefilled (one sequence, right-padded to a page
-            multiple so jit shapes bucket), its K/V scattered into freshly
-            allocated pages, and the slot joins the running batch.
+            the prompt is prefilled in PAGE-ALIGNED CHUNKS written straight
+            into freshly allocated pages (``serving/prefill.py`` — no
+            contiguous KV buffer, no scatter copy; jit shapes bucket per
+            chunk length, not per padded prompt length), and the slot joins
+            the running batch.
   step      ONE jitted decode step advances every live slot at once (each at
-            its own depth — positions and lengths are per-sequence).
+            its own depth — positions and lengths are per-sequence, and each
+            slot carries its own sampling params + RNG key row).
   reclaim   finished sequences return their pages to the free list and their
             slot to the admit pool immediately; nobody waits for a batch.
   evict     if a slot's next token needs a page and the pool is exhausted,
@@ -18,9 +21,16 @@ with the production loop:
             recompute preemption): its pages are freed and it re-queues with
             prompt + generated-so-far, to be re-prefilled when space frees.
 
+Sampling is PER REQUEST: ``PagedRequest.temperature / top_k / seed`` ride
+into the jitted step as (B,) arrays plus per-slot key rows, so one compiled
+program serves any greedy/sampled mix. Keys derive from ``(seed, token
+index)`` alone (``decode.request_key``), so a preempted request resumes its
+sample stream deterministically. All-greedy batches keep using the original
+5-argument greedy step — output byte-identical to the greedy-only batcher.
+
 Throughput comes from the jit cache staying warm: the decode step sees one
-static shape (max_batch x max_pages_per_seq), prefill sees one shape per
-page-bucketed prompt length.
+static shape (max_batch x max_pages_per_seq), prefill sees at most
+``prefill_chunk_pages`` distinct chunk shapes in total.
 """
 from __future__ import annotations
 
@@ -32,9 +42,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import prefill
 from repro.models.config import ModelConfig
-from repro.serving.decode import make_paged_decode_step
+from repro.serving.decode import (make_paged_decode_step, request_key,
+                                 sample_logits_per_seq)
+from repro.serving.prefill import make_paged_prefill_step
 from repro.serving.paged_cache import PagedKVCache
 
 __all__ = ["PagedRequest", "ContinuousBatcher"]
@@ -42,11 +53,19 @@ __all__ = ["PagedRequest", "ContinuousBatcher"]
 
 @dataclasses.dataclass
 class PagedRequest:
-    """One generation request; ``out`` accumulates across preemptions."""
+    """One generation request; ``out`` accumulates across preemptions.
+
+    ``temperature <= 0`` decodes greedily (the default — byte-identical to
+    the pre-sampling batcher); ``temperature > 0`` samples, optionally
+    top-k-restricted, from the stream seeded by ``seed``.
+    """
 
     prompt: np.ndarray              # (S,) int32
     max_new: int = 32
     out: List[int] = dataclasses.field(default_factory=list)
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
 
 
 @dataclasses.dataclass
@@ -60,7 +79,8 @@ class _Slot:
 
 class ContinuousBatcher:
     def __init__(self, params_q, cfg: ModelConfig, cache: PagedKVCache,
-                 max_batch: int = 4, use_pallas: bool = True):
+                 max_batch: int = 4, use_pallas: bool = True,
+                 prefill_chunk_pages: int = 4):
         self.params = params_q
         self.cfg = cfg
         self.cache = cache
@@ -69,30 +89,55 @@ class ContinuousBatcher:
         self.queue: Deque[PagedRequest] = collections.deque()
         self.done: List[PagedRequest] = []
         self.step_fn = jax.jit(make_paged_decode_step(cfg, use_pallas=use_pallas))
-        self._prefill_fns = {}
-        self.stats = {"steps": 0, "prefills": 0, "evictions": 0,
-                      "peak_pages": 0}
+        self.sampled_step_fn = jax.jit(make_paged_decode_step(
+            cfg, use_pallas=use_pallas, per_request=True))
+        self.prefill_chunk_pages = max(int(prefill_chunk_pages), 1)
+        self._prefill_chunk = jax.jit(make_paged_prefill_step(cfg))
+        self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
+                      "evictions": 0, "peak_pages": 0}
 
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: PagedRequest) -> None:
+        if len(req.prompt) == 0:
+            # the contiguous-prefill path silently decoded from a garbage
+            # position here; generation with no conditioning is ill-defined
+            raise ValueError("empty prompt: nothing to condition on")
         if len(req.prompt) + req.max_new > \
                 self.cache.max_pages_per_seq * self.cache.page_size:
             raise ValueError("request exceeds max_pages_per_seq budget")
         self.queue.append(req)
 
-    def _prefill_fn(self, s_pad: int):
-        if s_pad not in self._prefill_fns:
-            self._prefill_fns[s_pad] = jax.jit(
-                lambda p, toks: prefill(p, self.cfg, toks, s_pad))
-        return self._prefill_fns[s_pad]
+    def _first_token(self, req: PagedRequest, logits_row) -> int:
+        """Select the token that follows the prefilled prompt.
+
+        Greedy requests take the argmax (the pre-sampling behaviour exactly);
+        sampling requests draw through the SAME selection function, key and
+        logits width as the jitted decode step (``sample_logits_per_seq``
+        over the full padded-vocab row, key folded from (seed, token index))
+        — categorical draws depend on the array width, so slicing to
+        ``vocab_size`` here would fork a preempted request's sample stream
+        on padded-vocab configs.
+        """
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits_row[: self.cfg.vocab_size]))
+        key = request_key(req.seed, len(req.out))
+        tok = sample_logits_per_seq(
+            logits_row[None], key[None],
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32))
+        return int(tok[0])
 
     def _admit_one(self) -> bool:
-        """Prefill the queue head into a free slot. False if blocked."""
+        """Chunk-prefill the queue head into a free slot. False if blocked."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return False
         req = self.queue[0]
+        if len(req.out) >= req.max_new:     # nothing left to generate
+            self.queue.popleft()
+            self.done.append(req)
+            return True
         plen = len(req.prompt) + len(req.out)  # preempted: re-prefill both
         n_pages = self.cache.pages_for(plen)
         # when the prompt exactly fills its pages, the first decode write
@@ -103,13 +148,24 @@ class ContinuousBatcher:
         if page_ids is None:
             return False
         self.queue.popleft()
-        s_pad = n_pages * self.cache.page_size
-        toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :plen] = np.concatenate([req.prompt, req.out]) \
-            if req.out else req.prompt
-        logits, kv = self._prefill_fn(s_pad)(self.params, jnp.asarray(toks))
-        self.cache.write_prefill(page_ids[:n_pages], kv, plen)
-        nxt = int(jnp.argmax(logits[0, plen - 1, : self.cfg.vocab_size]))
+        psz = self.cache.page_size
+        full = np.concatenate([req.prompt, np.asarray(req.out, np.int32)]) \
+            if req.out else np.asarray(req.prompt, np.int32)
+        bt = jnp.asarray(self.cache.block_table_row(page_ids)[None])
+        chunk_tokens = self.prefill_chunk_pages * psz
+        off = 0
+        logits = None
+        while off < plen:
+            n_tok = min(chunk_tokens, plen - off)
+            c = self.cache.pages_for(n_tok) * psz   # pad tail to a page multiple
+            toks = np.zeros((1, c), np.int32)
+            toks[0, :n_tok] = full[off: off + n_tok]
+            logits, self.cache.pools = self._prefill_chunk(
+                self.params, jnp.asarray(toks), self.cache.pools, bt,
+                jnp.int32(off))
+            self.stats["prefill_chunks"] += 1
+            last_off, off = off, off + n_tok
+        nxt = self._first_token(req, logits[0, (plen - 1) - last_off])
         self.stats["prefills"] += 1
         slot = _Slot(req=req, page_ids=page_ids, seq_len=plen, last_tok=nxt,
                      ticket=self.stats["prefills"])
@@ -177,6 +233,26 @@ class ContinuousBatcher:
             toks[i, 0] = slot.last_tok
         return jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(lens)
 
+    def _sampling_arrays(self):
+        """Per-slot (seeds, token_indices, temperatures, top_ks), all (B,).
+
+        Plain host-side int/float fills — the key fold happens inside the
+        jitted step, so no per-slot device round trips on the decode path.
+        """
+        seeds = np.zeros((self.B,), np.int32)
+        idx = np.zeros((self.B,), np.int32)
+        temps = np.zeros((self.B,), np.float32)
+        top_ks = np.zeros((self.B,), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot is None or slot.req.temperature <= 0.0:
+                continue
+            seeds[i] = slot.req.seed
+            idx[i] = len(slot.req.out)
+            temps[i] = slot.req.temperature
+            top_ks[i] = slot.req.top_k
+        return (jnp.asarray(seeds), jnp.asarray(idx), jnp.asarray(temps),
+                jnp.asarray(top_ks))
+
     def step(self) -> int:
         """Admit + one decode step for all live slots. Returns #live."""
         self._admit()
@@ -189,24 +265,39 @@ class ContinuousBatcher:
             - self.cache.allocator.num_free
         self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
         toks, bt, lens = self._batch_arrays()
-        next_toks, self.cache.pools = self.step_fn(
-            self.params, toks, self.cache.pools, bt, lens)
+        if any(self.slots[i].req.temperature > 0.0 for i in live):
+            seeds, idx, temps, top_ks = self._sampling_arrays()
+            next_toks, self.cache.pools = self.sampled_step_fn(
+                self.params, toks, self.cache.pools, bt, lens, seeds, idx,
+                temps, top_ks)
+        else:  # all-greedy: the original 5-arg step, byte-identical output
+            next_toks, self.cache.pools = self.step_fn(
+                self.params, toks, self.cache.pools, bt, lens)
         next_toks = np.asarray(next_toks)
         self.stats["steps"] += 1
         for i in live:
             slot = self.slots[i]
             slot.seq_len += 1
+            if len(slot.req.out) >= slot.req.max_new:
+                # defensive: a full request must never grow past its budget
+                self._finish_if_done(i)
+                continue
             slot.last_tok = int(next_toks[i, 0])
             slot.req.out.append(slot.last_tok)
             self._finish_if_done(i)
         return len(live)
 
     def run(self, requests) -> List[List[int]]:
-        """Serve a request list to completion; outputs in submission order."""
+        """Serve a request list to completion; outputs in submission order.
+
+        ``out`` is bounded by ``max_new`` at generation time (admit and step
+        both stop appending at the budget), so no output truncation is
+        needed here.
+        """
         for r in requests:
             self.submit(r)
         while self.queue or any(s is not None for s in self.slots):
             n = self.step()
             if n == 0 and self.queue:
                 raise RuntimeError("queue stalled: prompts cannot be admitted")
-        return [r.out[: r.max_new] for r in requests]
+        return [r.out for r in requests]

@@ -24,19 +24,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QTensor
 from repro.kernels import paged_decode
 from repro.models import layers as L
 from repro.models.config import ModelConfig
-from repro.models.model import dequant_tree, embed_tokens
+from repro.models.model import dequant_tree, embed_tokens, lm_head_logits
 
-__all__ = ["make_paged_decode_step", "paged_attention_block", "sample_logits",
-           "sample_step_keys"]
+__all__ = ["make_paged_decode_step", "paged_attention_block",
+           "paged_block_body", "sample_logits", "sample_logits_per_seq",
+           "sample_step_keys", "request_key"]
 
 
 def sample_step_keys(key, batch: int):
     """(B, 2) uint32 per-sequence keys for one sampling step."""
     return jax.random.split(key, batch)
+
+
+def request_key(seed: int, token_index: int):
+    """The RNG key for a request's ``token_index``-th generated token.
+
+    Derived from (seed, token index) ALONE — not from how many decode steps
+    actually ran — so a recompute-preempted request resumes its sample stream
+    exactly where it left off: the re-admit's first sampled token uses the
+    same key the uninterrupted decode step would have used.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(seed), token_index)
 
 
 def sample_logits(logits, keys, *, temperature: float, top_k: int = 0):
@@ -57,9 +68,54 @@ def sample_logits(logits, keys, *, temperature: float, top_k: int = 0):
     return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
 
 
+def sample_logits_per_seq(logits, keys, temperature, top_k):
+    """Per-SEQUENCE temperature / top-k sampling (params as (B,) arrays).
+
+    The batcher's mixed-batch path: each slot carries its own ``temperature``
+    (f32) and ``top_k`` (int32), so one compiled step serves any mix of
+    greedy and sampled requests. Slots with ``temperature <= 0`` take the
+    exact argmax (identical to the greedy step's selection); ``top_k == 0``
+    means unrestricted. Per-row thresholds come from a full descending sort
+    (k is per-row, so ``lax.top_k``'s static k does not apply); for a row
+    with top_k == k the kept set matches ``sample_logits``'s
+    ``lax.top_k``-derived threshold exactly.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]             # descending
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    restricted = jnp.where(logits < kth, -jnp.inf, logits)
+    eff = jnp.where((top_k > 0)[:, None], restricted, logits)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    sampled = jax.vmap(jax.random.categorical)(keys, eff / safe_t[:, None])
+    return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)
+
+
 def _write_token(pool, phys, slot, val):
     """pool (N, psz, ...) <- val (B, ...) at (phys[b], slot[b]) per slot b."""
     return pool.at[phys, slot].set(val.astype(pool.dtype))
+
+
+def paged_block_body(pl, cfg: ModelConfig, carry, pool_slice, attn_sublayer):
+    """One dense/moe block over a paged pool slice, shared by BOTH paged
+    serving stacks — ``attn_sublayer(attn_params, normed_x, pool_slice) ->
+    (attn_out, new_pool)`` is the ONLY difference between the decode step
+    (single-token scatter-write) and the prefill chunk step (chunk write).
+    Keeping one body here is what guarantees their numerics cannot drift
+    (the prefill<=1e-5 equivalence and preemption determinism depend on a
+    re-admitted request resuming through the same block math)."""
+    pl = dequant_tree(pl, jnp.dtype(cfg.compute_dtype))
+    a_in = L.apply_norm(carry, pl["ln1"], cfg.norm)
+    a, new_pool = attn_sublayer(pl["attn"], a_in, pool_slice)
+    hh = carry + a
+    m_in = L.apply_norm(hh, pl["ln2"], cfg.norm)
+    if "moe" in pl:
+        hh = hh + L.moe_ffn(pl["moe"], cfg, m_in)
+    else:
+        hh = hh + L.mlp(pl["mlp"], cfg, m_in)
+    return hh, new_pool
 
 
 def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
@@ -93,7 +149,8 @@ def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
 
 
 def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True,
-                           temperature: float = 0.0, top_k: int = 0):
+                           temperature: float = 0.0, top_k: int = 0,
+                           per_request: bool = False):
     """(params_q, tokens (B,1), pools, block_tables (B,P), seq_lens (B,))
     -> (next_token (B,1) int32, updated pools).
 
@@ -105,6 +162,13 @@ def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True,
     argument, ``sample_keys`` (B, 2) uint32 per-sequence keys, and samples
     through ``sample_logits`` (optionally top-k-restricted); the default
     greedy step keeps the original signature and argmax selection unchanged.
+
+    ``per_request=True`` instead appends FOUR trailing arguments — ``seeds``
+    (B,) int32, ``token_indices`` (B,) int32, ``temperatures`` (B,) f32 and
+    ``top_ks`` (B,) int32. Keys are folded from (seed, token index) inside
+    the compiled step (``request_key``) and selection routes through
+    ``sample_logits_per_seq``, so a single program serves any per-slot mix
+    of greedy and sampled requests (the continuous batcher's path).
     """
     if cfg.block_pattern not in ("dense", "moe"):
         raise ValueError(f"paged decode requires attention blocks, "
@@ -116,33 +180,31 @@ def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True,
         positions = seq_lens[:, None]
         h = embed_tokens(params_q, cfg, tokens, positions)
 
+        def attn(p, x, pool_slice):
+            return paged_attention_block(p, cfg, x, pool_slice, block_tables,
+                                         seq_lens, use_pallas=use_pallas)
+
         def body(carry, xs):
             pl, pool_slice = xs
-            pl = dequant_tree(pl, jnp.dtype(cfg.compute_dtype))
-            a_in = L.apply_norm(carry, pl["ln1"], cfg.norm)
-            a, new_pool = paged_attention_block(
-                pl["attn"], cfg, a_in, pool_slice, block_tables, seq_lens,
-                use_pallas=use_pallas)
-            hh = carry + a
-            m_in = L.apply_norm(hh, pl["ln2"], cfg.norm)
-            if "moe" in pl:
-                hh = hh + L.moe_ffn(pl["moe"], cfg, m_in)
-            else:
-                hh = hh + L.mlp(pl["mlp"], cfg, m_in)
-            return hh, new_pool
+            return paged_block_body(pl, cfg, carry, pool_slice, attn)
 
         h, new_pools = jax.lax.scan(body, h, (params_q["blocks"], pools),
                                     unroll=cfg.unroll_layers)
-        h = L.apply_norm(h, params_q["final_norm"], cfg.norm)
-        head = (params_q["embed"]["tok"].T if cfg.tie_embeddings
-                else params_q["lm_head"])
-        if isinstance(head, QTensor):
-            head = head.dequantize(h.dtype)
-        logits = h @ head.astype(h.dtype)
-        V = logits.shape[-1]
-        if V > cfg.vocab_size:
-            logits = jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -jnp.inf)
-        return logits, new_pools
+        return lm_head_logits(params_q, cfg, h, mask_vocab=True), new_pools
+
+    if per_request:
+        def per_request_step(params_q, tokens, pools, block_tables, seq_lens,
+                             seeds, token_indices, temperatures, top_ks):
+            logits, new_pools = logits_step(params_q, tokens, pools,
+                                            block_tables, seq_lens)
+            # keys are derived INSIDE the compiled step from (seed, token
+            # index) — the batcher ships two int vectors instead of running
+            # B tiny key-fold programs (device round trips) per decode step
+            keys = jax.vmap(request_key)(seeds, token_indices)
+            next_tok = sample_logits_per_seq(logits[:, -1], keys,
+                                             temperatures, top_ks)
+            return next_tok[:, None], new_pools
+        return per_request_step
 
     if temperature > 0.0:
         def sampled_step(params_q, tokens, pools, block_tables, seq_lens,

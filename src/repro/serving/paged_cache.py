@@ -133,7 +133,19 @@ class PagedKVCache:
         row[: len(page_ids)] = page_ids
         return row
 
-    # -- prefill write -----------------------------------------------------
+    def gather_tokens(self, page_ids: Sequence[int], length: int) -> dict:
+        """Read the first ``length`` token rows of a sequence back out of the
+        pool: {key: (L, length, ...)} in token order. Test/debug helper — the
+        serving path never materialises this contiguous view."""
+        ids = jnp.asarray(page_ids, jnp.int32)
+        out = {}
+        for key, pool in self.pools.items():
+            rows = pool[:, ids]                          # (L, n, psz, ...)
+            rows = rows.reshape((rows.shape[0], -1) + rows.shape[3:])
+            out[key] = rows[:, :length]
+        return out
+
+    # -- prefill write (legacy contiguous path) ----------------------------
 
     def write_prefill(self, page_ids: Sequence[int], cache: dict,
                       length: int) -> None:
@@ -144,6 +156,10 @@ class PagedKVCache:
         page_size`` covering the ``length``-token prompt. Rows past
         ``length`` inside the last page carry garbage — masked at read time
         by the per-sequence length.
+
+        Since serving v2 the batcher admits through the CHUNKED paged
+        prefill (``serving/prefill.py``) and never calls this; it remains as
+        the reference path the equivalence tests compare against.
         """
         n = len(page_ids)
         need = self.pages_for(length)

@@ -297,3 +297,96 @@ def test_fused_engine_run_improves(tiny_opt):
                         fused_kernel=True)
     res = run_search(params, params, cfg, QCFG, calib, scfg)
     assert res.final_loss < res.initial_loss
+    assert res.stats["fused"] is True
+
+
+def test_fused_downgrade_warns_and_is_recorded():
+    """Regression (ISSUE 4): an adapter without ``transform_quant_unit``
+    (MambaAdapter) must WARN when fused_kernel=True is silently unusable,
+    and record stats["fused"] = False instead of dropping the request."""
+    cfg = get_config("mamba2-2.7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                               cfg.vocab_size)
+    qcfg = QuantConfig(bits=2, group_size=16)
+    scfg = SearchConfig(steps=2, n_match_layers=0, log_every=0,
+                        fused_kernel=True)
+    with pytest.warns(UserWarning, match="transform_quant_unit"):
+        res = run_search(params, params, cfg, qcfg, calib, scfg)
+    assert res.stats["fused"] is False
+
+
+def test_fused_bias_and_gate_transform_ordering():
+    """Regression (ISSUE 4): ``DenseFFNAdapter.transform_quant_unit`` must
+    transform b_up as (rotate -> scale -> permute) and b_gate as
+    permute-only — EXACTLY ``inv.apply_transform_ffn``'s ordering — on a
+    gated + biased FFN (the seed cfgs exercise bias xor gate, never both)."""
+    cfg = get_config("opt-tiny").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=256, n_heads=4,
+        n_kv_heads=4, gated_mlp=True, use_bias=True)
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    adapter = DenseFFNAdapter(cfg)
+    base = adapter.base_stack(params)
+    assert set(base) >= {"up", "down", "gate", "b_up", "b_gate"}
+    t = inv.propose(jax.random.PRNGKey(9), inv.identity_transform(cfg.d_ff),
+                    inv.ProposalConfig())
+    got = adapter.transform_quant_unit(base, t, 0, QCFG)
+    b = jax.tree.map(lambda x: x[0], base)
+    _, _, b_up_ref, _, b_gate_ref = inv.apply_transform_ffn(
+        t, b["up"], b["down"], b["b_up"], b["gate"], b["b_gate"])
+    np.testing.assert_allclose(np.asarray(got["b_up"]),
+                               np.asarray(b_up_ref), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got["b_gate"]),
+                               np.asarray(b_gate_ref), rtol=0, atol=0)
+    # and the fused weights still agree with the unfused composition
+    want = adapter.quant_unit(adapter.transform_unit(base, t, 0), QCFG)
+    for k in ("up", "gate", "down"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Stats correctness (ISSUE 4 satellites)
+# ---------------------------------------------------------------------------
+
+def test_uphill_accepts_counts_strict_uphill_as_int(tiny_opt):
+    """``uphill_accepts`` must count accepted moves with delta STRICTLY > 0
+    (delta == 0 is lateral) and be a Python int, never a numpy bool sum.
+    Pinned by recomputing the count from the engine's own history."""
+    params, cfg, calib = tiny_opt
+    scfg = SearchConfig(steps=20, n_match_layers=0, log_every=0,
+                        temperature=10.0, anneal="constant")
+    res = run_search(params, params, cfg, QCFG, calib, scfg)
+    assert type(res.stats["uphill_accepts"]) is int
+    cur = res.history[0][1]
+    strict_uphill = 0
+    for _, loss, _, _, accepted in res.history[1:]:
+        if accepted:
+            strict_uphill += loss > cur
+            cur = loss
+    assert res.stats["uphill_accepts"] == strict_uphill
+    # and a cold chain can never move uphill
+    cold = run_search(params, params, cfg, QCFG, calib,
+                      SearchConfig(steps=10, n_match_layers=0, log_every=0))
+    assert cold.stats["uphill_accepts"] == 0
+
+
+def test_hybrid_search_spends_odd_step_budgets_fully():
+    """Regression (ISSUE 4): ``run_search_hybrid`` with ODD steps must run
+    ``steps // 2`` + ``steps - steps // 2`` (not halve twice), and merge
+    histories/stats across both phases."""
+    from repro.core.search import run_search_hybrid
+    cfg = get_config("zamba2-7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                               cfg.vocab_size)
+    qcfg = QuantConfig(bits=2, group_size=16)
+    res = run_search_hybrid(params, params, cfg, qcfg, calib,
+                            SearchConfig(steps=7, n_match_layers=0,
+                                         log_every=0))
+    # two phases, each history = steps + 1 (the step-0 entry): 3+1 + 4+1
+    assert len(res.history) == 7 + 2
+    assert res.stats["proposals"] == 7, "odd budgets must be spent in full"
+    assert len(res.island_histories) == 1
+    assert len(res.island_histories[0]) == 7 + 2
+    assert type(res.stats["uphill_accepts"]) is int
