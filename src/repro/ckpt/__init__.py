@@ -1,4 +1,9 @@
 from repro.ckpt.checkpoint import (CheckpointManager, save_checkpoint,
-                                   restore_checkpoint, latest_step)
+                                   restore_checkpoint,
+                                   save_sharded_checkpoint,
+                                   restore_sharded_checkpoint, latest_step,
+                                   list_steps)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "save_sharded_checkpoint", "restore_sharded_checkpoint",
+           "latest_step", "list_steps"]

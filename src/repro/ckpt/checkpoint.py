@@ -1,27 +1,51 @@
-"""Sharded checkpointing with manifest, async save, and elastic re-mesh restore.
+"""Sharded checkpointing: manifests, async save, addressable-shard formats.
 
-Layout:
+Two on-disk formats share one directory layout and one manifest commit point:
+
+format 1 — host-local full arrays (the original single-host container path):
     <dir>/step_000100/
-        manifest.json        — step, config hash, tree structure, global shapes
-        host0000.npz         — this host's shard of every leaf (flat key -> array)
+        manifest.json        — step, keys (global shape/dtype/sha), extra
+        host0000.npz         — this host's FULL copy of every leaf
 
-Design points (DESIGN.md §5):
-  - save is ASYNC (background thread) — training continues while the previous
-    step serializes; ``wait()`` joins before the next save or exit;
-  - restore is ELASTIC: the manifest records global logical shapes, restore
-    re-shards onto ANY mesh/host topology (leaves are saved as full arrays
-    per host here — single-host container — but the addressable-shard path is
-    the same code with a gather swapped in);
-  - integrity: manifest carries per-leaf checksums; restore verifies them;
-  - QTensor leaves round-trip (flattened to their component arrays).
+format 2 — addressable shards (the real multi-host path):
+    <dir>/step_000100/
+        host0000.npz         — ONLY the shards addressable on host 0
+        shards_host0000.json — per-shard records: key, npz entry, index
+                               ([start, stop) per dim) and sha256 checksum
+        host0001.npz / shards_host0001.json / ...
+        manifest.json        — tree structure + GLOBAL shapes, written by
+                               process 0 only after every host's shard
+                               manifest landed (a filesystem barrier, so the
+                               manifest stays the atomic commit record and
+                               ``list_steps`` never sees a partial save)
+
+Design points:
+  - save is ASYNC-capable (``CheckpointManager``): leaves are snapshotted to
+    host memory synchronously, file writes happen in a background thread;
+  - save writes only ``arr.addressable_shards`` with ``replica_id == 0`` —
+    each global shard is written exactly once across the fleet, replicated
+    leaves are written by whichever host owns replica 0;
+  - restore is ELASTIC: ``restore_sharded_checkpoint`` assembles every leaf
+    against a TARGET sharding via ``jax.make_array_from_single_device_arrays``
+    — the target mesh may have a different shape, host count, or axis split
+    than the one that saved (N hosts -> M hosts re-mesh). ``shardings=None``
+    assembles plain host-local arrays (the degenerate 1-host re-mesh);
+  - integrity: every restore path verifies checksums — format 1 per leaf,
+    format 2 per shard — and corruption errors NAME THE FILE so the operator
+    knows which host's write is bad;
+  - QTensor leaves round-trip component-wise (packed/scale/zero are separate
+    entries, so the component-level shardings from
+    ``dist.sharding.param_specs`` apply to save and restore alike).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
 import threading
+import time
 from typing import Optional
 
 import jax
@@ -30,16 +54,20 @@ import numpy as np
 from repro.core.quant import QTensor
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "save_sharded_checkpoint", "restore_sharded_checkpoint",
            "latest_step", "list_steps"]
 
 _SEP = "/"
 
 
 def _flatten(tree, path=()):
+    """Yield (path, leaf) with QTensor exploded to components and None kept
+    as a sentinel. Leaves are NOT converted — they may be sharded jax arrays
+    whose full value is not addressable on this host."""
     if isinstance(tree, QTensor):
-        yield path + ("__qt_packed",), np.asarray(tree.packed)
-        yield path + ("__qt_scale",), np.asarray(tree.scale)
-        yield path + ("__qt_zero",), np.asarray(tree.zero)
+        yield path + ("__qt_packed",), tree.packed
+        yield path + ("__qt_scale",), tree.scale
+        yield path + ("__qt_zero",), tree.zero
         yield path + ("__qt_meta",), np.array(
             [tree.bits, tree.group_size] + list(tree.shape), np.int64)
     elif isinstance(tree, dict):
@@ -51,7 +79,12 @@ def _flatten(tree, path=()):
     elif tree is None:
         yield path + ("__none",), np.zeros((), np.int8)
     else:
-        yield path, np.asarray(tree)
+        yield path, tree
+
+
+def _flatten_numpy(tree) -> dict:
+    """Flat key -> full numpy value (format 1: every leaf fully addressable)."""
+    return {_SEP.join(p): np.asarray(v) for p, v in _flatten(tree)}
 
 
 def _unflatten(flat: dict):
@@ -70,7 +103,7 @@ def _unflatten(flat: dict):
         if "__none" in node:
             return None
         if "__qt_meta" in node:
-            meta = node["__qt_meta"]
+            meta = np.asarray(node["__qt_meta"])
             bits, group = int(meta[0]), int(meta[1])
             shape = tuple(int(x) for x in meta[2:])
             return QTensor(jax.numpy.asarray(node["__qt_packed"]),
@@ -90,15 +123,66 @@ def _unflatten(flat: dict):
                         is_leaf=lambda x: isinstance(x, np.ndarray) or x is None)
 
 
+def _flatten_shardings(tree, path=()):
+    """Flat key -> target sharding, mirroring ``_flatten``'s key scheme.
+
+    The spec tree mirrors the SAVED tree: QTensor nodes may carry
+    component-wise shardings (``dist.sharding.param_specs``); ``__qt_meta``
+    is host metadata and always restores locally. A plain (non-QTensor-aware)
+    sharding at a QTensor position applies to all three components only when
+    identical treatment is valid — we require component-wise trees and fall
+    back to local assembly otherwise."""
+    if tree is None:
+        return {}
+    out: dict = {}
+    if isinstance(tree, QTensor):
+        out[_SEP.join(path + ("__qt_packed",))] = tree.packed
+        out[_SEP.join(path + ("__qt_scale",))] = tree.scale
+        out[_SEP.join(path + ("__qt_zero",))] = tree.zero
+        return out
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_shardings(v, path + (k,)))
+        return out
+    if isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten_shardings(v, path + (f"__{i}",)))
+        return out
+    out[_SEP.join(path)] = tree
+    return out
+
+
 def _checksum(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
 
+
+def _publish_npz(directory: pathlib.Path, name: str, flat: dict):
+    tmp = directory / f".tmp_{name}"                  # np.savez appends .npz
+    np.savez(tmp, **flat)                             # unless it's present
+    (directory / f".tmp_{name}.npz").rename(directory / f"{name}.npz")
+
+
+def _publish_json(path: pathlib.Path, obj):
+    tmp = path.with_name("." + path.name + ".tmp")
+    tmp.write_text(json.dumps(obj))
+    tmp.rename(path)
+
+
+# ---------------------------------------------------------------------------
+# format 1: host-local full arrays
+# ---------------------------------------------------------------------------
 
 def save_checkpoint(directory, step: int, tree, *, host_id: int = 0,
                     extra: Optional[dict] = None, verify: bool = True):
     d = pathlib.Path(directory) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
-    flat = {_SEP.join(path): np.asarray(v) for path, v in _flatten(tree)}
+    flat = _flatten_numpy(tree)
+    _write_full(d, step, flat, host_id=host_id, extra=extra, verify=verify)
+    return d
+
+
+def _write_full(d: pathlib.Path, step: int, flat: dict, *, host_id: int,
+                extra: Optional[dict], verify: bool):
     manifest = {
         "step": step,
         "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
@@ -107,32 +191,309 @@ def save_checkpoint(directory, step: int, tree, *, host_id: int = 0,
         "extra": extra or {},
         "format": 1,
     }
-    tmp = d / f".tmp_host{host_id:04d}.npz"            # np.savez appends .npz
-    np.savez(tmp, **flat)                              # unless it's present
-    tmp.rename(d / f"host{host_id:04d}.npz")           # atomic publish
-    (d / "manifest.json").write_text(json.dumps(manifest))
-    return d
+    _publish_npz(d, f"host{host_id:04d}", flat)
+    _publish_json(d / "manifest.json", manifest)
 
 
 def restore_checkpoint(directory, step: Optional[int] = None, *, host_id: int = 0,
                        verify: bool = True):
     """Returns (tree, manifest). Elastic: caller re-shards with
-    jax.device_put(tree, shardings) for whatever mesh is now alive."""
+    jax.device_put(tree, shardings) for whatever mesh is now alive. For
+    format-2 (addressable-shard) checkpoints use
+    ``restore_sharded_checkpoint`` — calling this on one restores the full
+    tree host-locally."""
     base = pathlib.Path(directory)
+    step = _resolve_step(base, step)
+    d = base / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    if manifest.get("format", 1) == 2:
+        tree = restore_sharded_checkpoint(directory, step, None,
+                                          verify=verify)[0]
+        return tree, manifest
+    shard_file = d / f"host{host_id:04d}.npz"
+    try:
+        with np.load(shard_file) as z:
+            flat = {k: z[k] for k in z.files}
+    except Exception as e:  # zip CRC / truncation surfaces before checksums
+        raise IOError(f"checkpoint corruption in {shard_file}: "
+                      f"unreadable shard file ({e})") from e
+    if verify:
+        for k, meta in manifest["keys"].items():
+            if k not in flat:
+                raise IOError(f"checkpoint corruption in {shard_file}: "
+                              f"leaf {k!r} missing from shard file")
+            if "sha" in meta and _checksum(flat[k]) != meta["sha"]:
+                raise IOError(f"checkpoint corruption in {shard_file}: "
+                              f"leaf {k!r} fails its manifest checksum")
+    return _unflatten(flat), manifest
+
+
+def _resolve_step(base: pathlib.Path, step: Optional[int]) -> int:
     if step is None:
         step = latest_step(base)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {base}")
+    return step
+
+
+# ---------------------------------------------------------------------------
+# format 2: addressable shards (the multi-host path)
+# ---------------------------------------------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype string, including the ml_dtypes extension
+    types (bfloat16, float8_*) numpy itself cannot parse."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax dependency, always present
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _to_bytes(data: np.ndarray) -> np.ndarray:
+    """Flat uint8 view of a shard's payload. npz round-trips extension
+    dtypes (bfloat16 et al) as raw void and the typed assemble() assignment
+    then has no cast — so shards are stored as bytes and viewed back through
+    the manifest dtype on read."""
+    return np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+
+
+def _from_bytes(raw: np.ndarray, dtype: np.dtype, shape) -> np.ndarray:
+    return raw.view(dtype).reshape(shape)
+
+
+def _normalize_index(index, shape) -> list:
+    """tuple-of-slices -> [[start, stop], ...] resolved against ``shape``."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        if sl.step not in (None, 1):
+            raise ValueError(f"strided shard index unsupported: {sl}")
+        out.append([start, stop])
+    return out
+
+
+def _prepare_shards(tree):
+    """Synchronous device->host snapshot of this process's shard of every
+    leaf. Returns (records, flat_arrays, keys_meta):
+      records     — [{key, npz, index, sha}] for this host's shard manifest
+      flat_arrays — npz entry name -> numpy shard data
+      keys_meta   — flat key -> {shape, dtype} GLOBAL metadata (identical on
+                    every host; process 0's copy becomes the manifest)
+    Only shards with replica_id == 0 are kept, so each global shard is
+    written exactly once across all hosts."""
+    pid = jax.process_index()
+    records, flat_arrays, keys_meta = [], {}, {}
+    for path, leaf in _flatten(tree):
+        key = _SEP.join(path)
+        if isinstance(leaf, jax.Array):
+            keys_meta[key] = {"shape": list(leaf.shape),
+                              "dtype": str(leaf.dtype)}
+            for n, sh in enumerate(leaf.addressable_shards):
+                if sh.replica_id != 0:
+                    continue
+                data = _to_bytes(np.asarray(sh.data))
+                npz_key = f"{key}#{n}"
+                records.append({
+                    "key": key, "npz": npz_key,
+                    "index": _normalize_index(sh.index, leaf.shape),
+                    "sha": _checksum(data),
+                })
+                flat_arrays[npz_key] = data
+        else:  # host-side value (e.g. __qt_meta), identical everywhere
+            data = np.asarray(leaf)
+            keys_meta[key] = {"shape": list(data.shape),
+                              "dtype": str(data.dtype)}
+            if pid == 0:
+                npz_key = f"{key}#0"
+                raw = _to_bytes(data)
+                records.append({
+                    "key": key, "npz": npz_key,
+                    "index": [[0, d] for d in data.shape],
+                    "sha": _checksum(raw),
+                })
+                flat_arrays[npz_key] = raw
+    return records, flat_arrays, keys_meta
+
+
+def _write_shards(d: pathlib.Path, step: int, prepared, *, extra, timeout):
+    records, flat_arrays, keys_meta = prepared
+    pid, n_hosts = jax.process_index(), jax.process_count()
+    # a crashed earlier attempt at this step (no manifest.json committed)
+    # may have left THIS host's files behind; remove them first so process
+    # 0's filesystem barrier below cannot count a stale shard manifest as
+    # this attempt's. (Each host cleans only its own files — cross-host
+    # deletes would race with a peer's in-flight write. A peer that never
+    # restarts at all can still leave a stale manifest; the commit record
+    # staying absent until every host re-publishes bounds the damage to
+    # the uncommitted step.)
+    if not (d / "manifest.json").exists():
+        for stale in (d / f"host{pid:04d}.npz",
+                      d / f"shards_host{pid:04d}.json"):
+            try:
+                stale.unlink()
+            except FileNotFoundError:
+                pass
+    _publish_npz(d, f"host{pid:04d}", flat_arrays)
+    _publish_json(d / f"shards_host{pid:04d}.json",
+                  {"host": pid, "shards": records})
+    if pid != 0:
+        return
+    # filesystem barrier: the manifest is the commit record, so it must not
+    # land before every host's shard manifest has (no collective here — this
+    # may run on the CheckpointManager thread, where issuing collectives
+    # could interleave with the main thread's and deadlock the fleet)
+    deadline = time.monotonic() + timeout
+    while len(list(d.glob("shards_host*.json"))) < n_hosts:
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"step {step}: only "
+                f"{len(list(d.glob('shards_host*.json')))}/{n_hosts} host "
+                f"shard manifests landed within {timeout}s")
+        time.sleep(0.05)
+    _publish_json(d / "manifest.json", {
+        "step": step, "keys": keys_meta, "extra": extra or {},
+        "format": 2, "hosts": n_hosts,
+    })
+
+
+def save_sharded_checkpoint(directory, step: int, tree, *,
+                            extra: Optional[dict] = None,
+                            timeout: float = 120.0):
+    """Addressable-shard save: every host writes ONLY its local shards plus a
+    shard manifest (index + checksum per shard); process 0 publishes the
+    global manifest once all hosts' shard manifests exist. Synchronous; the
+    async wrapper is ``CheckpointManager(sharded=True)``."""
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    _write_shards(d, step, _prepare_shards(tree), extra=extra, timeout=timeout)
+    return d
+
+
+class _ShardReader:
+    """Lazy, checksum-verifying reader over every host's saved shards."""
+
+    def __init__(self, d: pathlib.Path, n_hosts: int, verify: bool):
+        self.d = d
+        self.verify = verify
+        self.by_key: dict = {}
+        self._npz: dict = {}
+        for h in range(n_hosts):
+            mf = d / f"shards_host{h:04d}.json"
+            if not mf.exists():
+                raise IOError(f"checkpoint corruption in {d}: shard manifest "
+                              f"{mf.name} missing (host {h} never wrote)")
+            for rec in json.loads(mf.read_text())["shards"]:
+                self.by_key.setdefault(rec["key"], []).append((h, rec))
+
+    def shard(self, host: int, rec: dict, dtype: np.dtype) -> np.ndarray:
+        f = self.d / f"host{host:04d}.npz"
+        if host not in self._npz:
+            if not f.exists():
+                raise IOError(f"checkpoint corruption in {f}: shard file "
+                              f"missing")
+            self._npz[host] = np.load(f)
+        try:
+            raw = self._npz[host][rec["npz"]]
+        except Exception as e:
+            raise IOError(f"checkpoint corruption in {f}: shard "
+                          f"{rec['npz']!r} unreadable ({e})") from e
+        if self.verify and _checksum(raw) != rec["sha"]:
+            raise IOError(f"checkpoint corruption in {f}: shard "
+                          f"{rec['npz']!r} fails its shard-manifest checksum")
+        shape = tuple(b - a for a, b in rec["index"])
+        return _from_bytes(raw, dtype, shape)
+
+    def close(self):
+        for z in self._npz.values():
+            z.close()
+
+    def assemble(self, key: str, shape, dtype, index=None) -> np.ndarray:
+        """Materialize ``arr[index]`` (or the full array) for a saved leaf by
+        stitching overlapping saved shards; verifies full coverage."""
+        if index is None:
+            index = [[0, d] for d in shape]
+        tgt_shape = tuple(b - a for a, b in index)
+        out = np.zeros(tgt_shape, dtype=dtype)
+        covered = 0
+        for host, rec in self.by_key.get(key, ()):
+            ov = []  # overlap box in global coords
+            for (ta, tb), (sa, sb) in zip(index, rec["index"]):
+                lo, hi = max(ta, sa), min(tb, sb)
+                if lo >= hi:
+                    ov = None
+                    break
+                ov.append((lo, hi))
+            if ov is None:
+                continue
+            data = self.shard(host, rec, dtype)
+            src = tuple(slice(lo - sa, hi - sa)
+                        for (lo, hi), (sa, _) in zip(ov, rec["index"]))
+            dst = tuple(slice(lo - ta, hi - ta)
+                        for (lo, hi), (ta, _) in zip(ov, index))
+            out[dst] = data[src]
+            covered += int(np.prod([hi - lo for lo, hi in ov])) if ov else 1
+        want = int(np.prod(tgt_shape)) if tgt_shape else 1
+        if covered != want:
+            raise IOError(
+                f"checkpoint corruption in {self.d}: leaf {key!r} has "
+                f"{covered}/{want} elements covered by saved shards for "
+                f"index {index} (missing or overlapping host shard files)")
+        return out
+
+
+def restore_sharded_checkpoint(directory, step: Optional[int] = None,
+                               shardings=None, *, verify: bool = True):
+    """Elastic restore of a format-2 checkpoint. Returns (tree, manifest).
+
+    ``shardings`` is a tree of target ``jax.sharding.Sharding`` leaves
+    mirroring the saved tree (QTensor positions may carry component-wise
+    QTensor spec nodes, as built by ``dist.sharding.param_specs`` +
+    ``to_shardings``). The target mesh may differ arbitrarily from the saving
+    mesh — each target shard is assembled from whichever hosts' saved shards
+    overlap it and placed via ``jax.make_array_from_single_device_arrays``.
+    ``shardings=None`` (or per-leaf None) assembles plain host-local arrays.
+    """
+    base = pathlib.Path(directory)
+    step = _resolve_step(base, step)
     d = base / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    with np.load(d / f"host{host_id:04d}.npz") as z:
-        flat = {k: z[k] for k in z.files}
-    if verify:
-        for k, meta in manifest["keys"].items():
-            if "sha" in meta and _checksum(flat[k]) != meta["sha"]:
-                raise IOError(f"checkpoint corruption in leaf {k!r}")
+    if manifest.get("format", 1) != 2:
+        tree, manifest = restore_checkpoint(directory, step, verify=verify)
+        if shardings is not None:
+            flat_s = _flatten_shardings(shardings)
+            flat = {k: (jax.device_put(v, flat_s[k])
+                        if flat_s.get(k) is not None else v)
+                    for k, v in _flatten_numpy(tree).items()}
+            tree = _unflatten(flat)
+        return tree, manifest
+    reader = _ShardReader(d, int(manifest.get("hosts", 1)), verify)
+    flat_s = _flatten_shardings(shardings)
+    try:
+        flat = {}
+        for key, meta in manifest["keys"].items():
+            shape = tuple(meta["shape"])
+            dtype = _np_dtype(meta["dtype"])
+            target = flat_s.get(key)
+            if target is None:
+                flat[key] = reader.assemble(key, shape, dtype)
+            else:
+                idx_map = target.addressable_devices_indices_map(shape)
+                bufs = [jax.device_put(
+                            reader.assemble(key, shape, dtype,
+                                            _normalize_index(idx, shape)), dev)
+                        for dev, idx in idx_map.items()]
+                flat[key] = jax.make_array_from_single_device_arrays(
+                    shape, target, bufs)
+    finally:
+        reader.close()
     return _unflatten(flat), manifest
 
+
+# ---------------------------------------------------------------------------
+# directory queries + async manager
+# ---------------------------------------------------------------------------
 
 def list_steps(directory) -> list:
     """Steps with a published manifest, ascending (partial saves excluded)."""
@@ -149,37 +510,72 @@ def latest_step(directory) -> Optional[int]:
 
 
 class CheckpointManager:
-    """Async save + retention. ``save()`` returns immediately; the previous
-    save is joined first (at most one in flight)."""
+    """Async save + retention. ``save()`` snapshots leaves to host memory
+    synchronously (donation-safe) and returns; file writes run on a
+    background thread, at most one in flight (``wait()`` joins).
 
-    def __init__(self, directory, keep: int = 3):
+    ``sharded=True`` switches to the format-2 addressable-shard writer: every
+    process must run ``save()``/``wait()`` at the same step, and ``restore``
+    takes target shardings for the elastic re-mesh. Retention (gc) is
+    process-0-only in that mode so hosts never race on unlinks."""
+
+    def __init__(self, directory, keep: int = 3, *, sharded: bool = False):
         self.dir = pathlib.Path(directory)
         self.keep = keep
+        self.sharded = sharded
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def save(self, step: int, tree, extra=None):
         self.wait()
-        host_tree = jax.tree.map(
-            lambda x: np.asarray(x), tree,
-            is_leaf=lambda x: isinstance(x, QTensor) or x is None)
+        d = self.dir / f"step_{step:08d}"
+        d.mkdir(parents=True, exist_ok=True)
+        if self.sharded:
+            prepared = _prepare_shards(tree)   # sync: donation-safe snapshot
+
+            def _write():
+                _write_shards(d, step, prepared, extra=extra, timeout=120.0)
+        else:
+            flat = _flatten_numpy(tree)        # sync: QTensor components too
+
+            def _write():
+                _write_full(d, step, flat, host_id=0, extra=extra,
+                            verify=True)
 
         def _work():
-            save_checkpoint(self.dir, step, host_tree, extra=extra)
-            self._gc()
+            try:
+                _write()
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — re-raised by wait()
+                self._error = e
 
         self._thread = threading.Thread(target=_work, daemon=True)
         self._thread.start()
 
     def wait(self):
+        """Join the in-flight save. A failure on the writer thread (shard
+        timeout, unwritable dir) re-raises HERE — callers that treat a
+        returned wait() as "the checkpoint is durable" (run_resilient,
+        PreemptionGuard.drain) must not be lied to by a dead daemon."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise IOError(f"async checkpoint save failed: {e}") from e
 
-    def restore(self, step=None):
+    def restore(self, step=None, shardings=None, *, verify: bool = True):
+        """Checksum-verifying restore (the async path verifies exactly like
+        the direct functions — corruption raises IOError naming the file)."""
         self.wait()  # an in-flight async save must land before we read
-        return restore_checkpoint(self.dir, step)
+        if self.sharded or shardings is not None:
+            return restore_sharded_checkpoint(self.dir, step, shardings,
+                                              verify=verify)
+        return restore_checkpoint(self.dir, step, verify=verify)
 
     def _gc(self):
+        if self.sharded and jax.process_index() != 0:
+            return
         steps = sorted(p for p in self.dir.glob("step_*"))
         for p in steps[:-self.keep]:
             for f in p.iterdir():

@@ -47,6 +47,8 @@ class SearchConfig:
     anneal: str = "geometric"      # schedule: constant | geometric | linear
     migrate_every: int = 50        # elite-migration cadence (0 = never)
     fused_kernel: bool = False     # kernels.transform_quant fused hot path
+    mapped: bool = False           # one island per mesh shard (shard_map);
+                                   # requires islands == global device count
 
 
 @dataclasses.dataclass

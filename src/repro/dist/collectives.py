@@ -22,7 +22,23 @@ from repro.core.quant import (QuantConfig, compute_qparams, dequantize_codes,
                               pack_codes, quantize_codes, unpack_codes,
                               vals_per_word)
 
-__all__ = ["compressed_psum", "argmin_allgather"]
+__all__ = ["compressed_psum", "argmin_allgather", "elite_broadcast"]
+
+
+def elite_broadcast(tree, owner, axis_name: str):
+    """Broadcast ``owner``'s pytree to every shard of ``axis_name``
+    (shard_map context only; ``owner`` may be traced, e.g. the index
+    ``argmin_allgather`` returned).
+
+    This is the island search's elite-STATE exchange: after the scalar
+    argmin picks the winning island, the winner's transform + fake-quant
+    stacks move across the mesh in one all-gather-and-take per leaf, and the
+    losing shard splices them into its own state. Exact — pure data
+    movement, no arithmetic on the payload."""
+    def one(x):
+        return jnp.take(jax.lax.all_gather(x, axis_name),
+                        jnp.asarray(owner, jnp.int32), axis=0)
+    return jax.tree.map(one, tree)
 
 
 def argmin_allgather(x, axis_name: str):

@@ -8,6 +8,8 @@ the property ``tests/test_substrate.py`` pins with an injected step-7 failure.
 """
 from __future__ import annotations
 
+import signal
+import threading
 import time
 from typing import Callable, Optional
 
@@ -15,7 +17,8 @@ import numpy as np
 
 from repro.ckpt.checkpoint import list_steps
 
-__all__ = ["StepWatchdog", "run_resilient", "remesh_restore"]
+__all__ = ["StepWatchdog", "PreemptionGuard", "run_resilient",
+           "remesh_restore"]
 
 
 class StepWatchdog:
@@ -50,9 +53,57 @@ class StepWatchdog:
         return float(np.median(self._times[-self.window:]))
 
 
+class PreemptionGuard:
+    """Preemption-signal → checkpoint-and-barrier hook.
+
+    Cloud schedulers announce eviction with a signal (SIGTERM on most
+    platforms) and a grace window; dying mid-step wastes the window and — on
+    a multi-host run — leaves peers hanging in a collective. The guard turns
+    the signal into a FLAG checked at step boundaries: ``run_resilient``
+    drains to a final checkpoint, then joins a ``runtime.barrier()`` so every
+    host exits with the SAME step durably on disk (the next incarnation
+    restores it, possibly onto a different mesh via ``remesh_restore``).
+
+    Use as a context manager so the previous handlers are restored (tests,
+    nested loops); ``signal.raise_signal`` or a real ``kill`` both work.
+    """
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.signals = tuple(signals)
+        self._flag = threading.Event()
+        self._prev: dict = {}
+
+    def __enter__(self):
+        for s in self.signals:
+            self._prev[s] = signal.signal(s, self._on_signal)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        self._prev.clear()
+        return False
+
+    def _on_signal(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def preempted(self) -> bool:
+        return self._flag.is_set()
+
+    def drain(self, ckpt, step: int, state) -> None:
+        """Checkpoint ``state`` at ``step``, join the save, then barrier so
+        every host has the step durably written before anyone exits."""
+        from repro.dist import runtime
+        if ckpt is not None:
+            ckpt.save(step, state)
+            ckpt.wait()
+        runtime.barrier("preemption-drain")
+
+
 def run_resilient(step_fn: Callable, state, n_steps: int, *, ckpt=None,
                   save_every: int = 0, start_step: int = 0, watchdog=None,
-                  max_restores: int = 8):
+                  max_restores: int = 8, preemption: Optional[PreemptionGuard] = None):
     """Run ``state = step_fn(state, step)`` for steps [start_step, n_steps),
     surviving step failures via checkpoint restore.
 
@@ -65,10 +116,14 @@ def run_resilient(step_fn: Callable, state, n_steps: int, *, ckpt=None,
     max_restores— restart budget; a persistent failure eventually re-raises
                   instead of looping (replay is only safe for transient
                   faults).
+    preemption  — optional ``PreemptionGuard``; once its signal fires the
+                  loop stops at the NEXT step boundary, checkpoints, joins a
+                  cross-host barrier, and returns early with a
+                  ("preempted", step) event.
 
     Returns (final_state, events) where events is a list of tuples:
     ("saved", step) / ("failure", step, msg) / ("restored", step) /
-    ("straggler", step, seconds).
+    ("straggler", step, seconds) / ("preempted", step).
 
     Caveat: with jitted step functions using donated arguments, a failure
     AFTER donation invalidates ``state``'s buffers — restore-from-checkpoint
@@ -88,6 +143,12 @@ def run_resilient(step_fn: Callable, state, n_steps: int, *, ckpt=None,
             if watchdog is not None and watchdog.observe(dt):
                 events.append(("straggler", step, dt))
             step += 1
+            if preemption is not None and preemption.preempted:
+                preemption.drain(ckpt, step, state)
+                if ckpt is not None:
+                    events.append(("saved", step))
+                events.append(("preempted", step))
+                return state, events
             if ckpt is not None and save_every and step % save_every == 0:
                 ckpt.save(step, state)
                 events.append(("saved", step))
@@ -125,15 +186,14 @@ def _restore_newest_intact(ckpt, initial, start_step: int, events: list):
 
 def remesh_restore(ckpt, shardings=None, step: Optional[int] = None):
     """Elastic restore: load the latest (or given) checkpoint and re-shard it
-    onto whatever mesh is now alive.
+    onto whatever mesh is now alive — including a DIFFERENT host count than
+    the one that saved (N hosts -> M hosts re-mesh).
 
-    ``shardings`` is a tree of ``jax.sharding.Sharding`` matching the state
-    tree (build one with ``dist.sharding.to_shardings``); None keeps the
-    restored single-host placement — the degenerate remesh onto one device.
+    ``shardings`` is a tree of target ``jax.sharding.Sharding`` leaves
+    matching the state tree (build one with ``dist.sharding.to_shardings``).
+    Format-2 (addressable-shard) checkpoints assemble each target shard from
+    whichever saved host shards overlap it; format-1 checkpoints load the
+    host-local full arrays and ``device_put`` onto the targets. ``None``
+    keeps host-local placement — the degenerate remesh onto one device.
     Returns (tree, manifest)."""
-    import jax
-
-    tree, manifest = ckpt.restore(step)
-    if shardings is not None:
-        tree = jax.device_put(tree, shardings)
-    return tree, manifest
+    return ckpt.restore(step, shardings)

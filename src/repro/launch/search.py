@@ -3,13 +3,14 @@
     PYTHONPATH=src python -m repro.launch.search --arch opt-tiny \
         --steps 40 --population 4 --islands 2 --bits 2 --group 32
 
-Builds the local mesh, shards the calibration batch over the data axis
-(islands map 1:1 onto that axis in the multi-host story — each shard climbs
-on its own calibration shard and only the elite exchange crosses hosts),
+Builds the local mesh, shards the calibration batch over the data axis,
 runs the RTN→InvarExplore pipeline through ``repro.search.engine``, and
-writes a proposals/sec artifact to
-``artifacts/benchmarks/BENCH_search.json`` so CI accumulates a search-perf
-trajectory next to ``BENCH_kernels.json``.
+merges a proposals/sec row into ``artifacts/benchmarks/BENCH_search.json``
+so CI accumulates a search-perf trajectory next to ``BENCH_kernels.json``.
+With ``--mapped`` the islands run one-per-device-shard
+(``SearchConfig(mapped=True)``; ``--islands`` must equal the device count)
+and the row lands under the ``search_mapped_islands/`` family — bench-smoke
+asserts both families are present.
 
 Configs are run in their ``.reduced()`` form: this driver is the
 CPU-container benchmark/smoke entry; the full-size configs are exercised
@@ -39,10 +40,25 @@ ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "benchmarks"
 __all__ = ["run_search_bench", "main"]
 
 
+def _merge_rows(out: pathlib.Path, row: dict):
+    """Accumulate rows by name (so the engine and mapped-islands benches land
+    side by side in one BENCH_search.json across invocations)."""
+    rows = []
+    if out.exists():
+        try:
+            rows = [r for r in json.loads(out.read_text())
+                    if r.get("name") != row["name"]]
+        except (ValueError, KeyError):
+            rows = []
+    rows.append(row)
+    out.write_text(json.dumps(rows, indent=1))
+
+
 def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
                      population: int = 4, islands: int = 1,
                      temperature: float = 0.0, anneal: str = "geometric",
                      migrate_every: int = 25, fused: bool = False,
+                     mapped: bool = False,
                      bits: int = 2, group: int = 32, n_seqs: int = 4,
                      seq_len: int = 128, seed: int = 0,
                      out: pathlib.Path = None) -> dict:
@@ -53,13 +69,15 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
     rules = ShardingRules(mesh, cfg)
     calib = jnp.asarray(calibration_tokens(cfg.vocab_size, n_seqs=n_seqs,
                                            seq_len=seq_len))
-    calib = jax.device_put(calib, jax.sharding.NamedSharding(
-        mesh, data_spec(rules, calib.shape[0])))
+    if not mapped:  # mapped mode replicates the calib batch to every island
+        calib = jax.device_put(calib, jax.sharding.NamedSharding(
+            mesh, data_spec(rules, calib.shape[0])))
 
     scfg = SearchConfig(steps=steps, seed=seed, n_match_layers=2, log_every=0,
                         population=population, islands=islands,
                         temperature=temperature, anneal=anneal,
-                        migrate_every=migrate_every, fused_kernel=fused)
+                        migrate_every=migrate_every, fused_kernel=fused,
+                        mapped=mapped)
     qcfg = QuantConfig(bits=bits, group_size=group)
 
     t0 = time.time()
@@ -68,8 +86,9 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
     dt = time.time() - t0
     sr = result.search
     proposals = sr.stats["proposals"] if sr.stats else steps
+    family = "search_mapped_islands" if mapped else "search/engine"
     row = {
-        "name": (f"search/engine/{arch}s{steps}p{population}i{islands}"
+        "name": (f"{family}/{arch}s{steps}p{population}i{islands}"
                  f"b{bits}g{group}" + ("fused" if fused else "")),
         "us_per_call": round(dt * 1e6 / max(proposals, 1), 1),
         "derived": (f"proposals_per_sec={proposals / max(dt, 1e-9):.2f} "
@@ -80,7 +99,7 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
     print(f"{row['name']},{row['us_per_call']},{row['derived']}")
     out = pathlib.Path(out) if out else ART / "BENCH_search.json"
     out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps([row], indent=1))
+    _merge_rows(out, row)
     return row
 
 
@@ -95,6 +114,9 @@ def main(argv=None) -> int:
     ap.add_argument("--migrate-every", type=int, default=25)
     ap.add_argument("--fused", action="store_true",
                     help="fused transform+fake-quant kernel hot path")
+    ap.add_argument("--mapped", action="store_true",
+                    help="one island per mesh shard (requires --islands == "
+                         "device count; see README 'Multi-host')")
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--group", type=int, default=32)
     ap.add_argument("--seqs", type=int, default=4)
@@ -105,9 +127,9 @@ def main(argv=None) -> int:
     run_search_bench(args.arch, steps=args.steps, population=args.population,
                      islands=args.islands, temperature=args.temperature,
                      anneal=args.anneal, migrate_every=args.migrate_every,
-                     fused=args.fused, bits=args.bits, group=args.group,
-                     n_seqs=args.seqs, seq_len=args.seq_len, seed=args.seed,
-                     out=args.out)
+                     fused=args.fused, mapped=args.mapped, bits=args.bits,
+                     group=args.group, n_seqs=args.seqs,
+                     seq_len=args.seq_len, seed=args.seed, out=args.out)
     return 0
 
 

@@ -17,13 +17,21 @@ EXACTLY the legacy ``core/search.py`` loop's, so the accepted-move trajectory
 reproduces the paper configuration unchanged (pinned by
 ``tests/test_search_engine.py``).
 
-Multi-host note: proposals come from counter-based ``jax.random`` keys and
-unit picks/accept draws from a host-side ``default_rng(seed)`` stream, so
-every host replays the same chain and only the (all-reduced) scalar loss
-feeds the accept decision. Islands run sequentially in-process here; the
-mesh-mapped execution (one island per data-axis shard,
-``islands.elite_over_mesh`` as the per-migration scalar exchange) is the
-designed-for multi-host path, not yet wired (ROADMAP).
+Execution modes:
+
+- sequential (default): islands run one after another in-process — the
+  reference semantics, and the only mode a 1-device host can run.
+- ``mapped=True``: one island per shard of a 1-D ("data",) mesh over ALL
+  global devices, stepped inside ``shard_map``. Every process replays every
+  island's HOST streams (unit picks, accept draws — cheap scalars), so the
+  accept logic stays on the host exactly as in sequential mode; only the
+  expensive proposal evaluation runs on-device, one island per shard, and
+  the per-migration traffic is one scalar ``argmin_allgather`` plus the
+  winner's state via ``elite_broadcast``. The mapped trajectory is pinned
+  BIT-FOR-BIT equal to the sequential island loop on a 1-host multi-device
+  mesh (``tests/test_search_mapped.py``), and the same code runs unchanged
+  under a real multi-process ``jax.distributed`` mesh (the CI ``distributed``
+  lane drives 2 processes through ``repro.launch.dist_smoke``).
 """
 from __future__ import annotations
 
@@ -39,7 +47,8 @@ from repro.core import invariance as inv
 from repro.core import objective as obj
 from repro.models.model import forward
 from repro.search import anneal
-from repro.search.islands import IslandState, make_island_streams, migrate
+from repro.search.islands import (IslandState, make_island_streams, migrate,
+                                  migrate_on_mesh)
 from repro.search.population import candidate_keys, stack_trees, take_tree
 
 __all__ = ["run_population_search"]
@@ -76,6 +85,7 @@ def run_population_search(
     K = max(int(getattr(scfg, "population", 1)), 1)
     n_islands = max(int(getattr(scfg, "islands", 1)), 1)
     migrate_every = int(getattr(scfg, "migrate_every", 0))
+    mapped = bool(getattr(scfg, "mapped", False))
     fused = bool(getattr(scfg, "fused_kernel", False))
     if fused and not hasattr(adapter, "transform_quant_unit"):
         warnings.warn(
@@ -101,62 +111,80 @@ def run_population_search(
     hidden_fp = jax.lax.stop_gradient(hidden_fp[:n_match]) if n_match else None
     logits_fp = jax.lax.stop_gradient(logits_fp)
 
-    def eval_stack_fn(fq):
-        params_q = adapter.install(params_base, fq)
-        logits, hidden = forward(params_q, cfg, calib_tokens,
+    # everything the proposal evaluation reads besides per-island state; the
+    # mapped mode ships this tree to the global mesh replicated, the
+    # sequential mode closes over it exactly as the legacy loop did
+    env = {"base": base, "params_base": params_base, "calib": calib_tokens,
+           "logits_fp": logits_fp, "hidden_fp": hidden_fp}
+
+    def eval_stack_fn(fq, env):
+        params_q = adapter.install(env["params_base"], fq)
+        logits, hidden = forward(params_q, cfg, env["calib"],
                                  collect_hidden=True, **fwd_kw)
         if scfg.objective == "kl":
-            ce = obj.calib_kl(logits, logits_fp, cfg.vocab_size)
+            ce = obj.calib_kl(logits, env["logits_fp"], cfg.vocab_size)
         else:
-            ce = obj.calib_ce(logits, calib_tokens, cfg.vocab_size)
-        mse = (obj.activation_mse(hidden, hidden_fp, n_match)
+            ce = obj.calib_ce(logits, env["calib"], cfg.vocab_size)
+        mse = (obj.activation_mse(hidden, env["hidden_fp"], n_match)
                if n_match else jnp.float32(0.0))
         return ce, mse
 
-    eval_stack = jax.jit(eval_stack_fn)
+    eval_stack = jax.jit(lambda fq: eval_stack_fn(fq, env))
 
     ce0, mse0 = map(float, eval_stack(fq0))
     alpha = obj.resolve_alpha(ce0, mse0, scfg.ce_weight) if n_match else 0.0
     loss0 = ce0 + alpha * float(mse0)
 
-    def quant_candidate(t_new, u):
+    def quant_candidate(t_new, u, env):
         if fused:
-            return adapter.transform_quant_unit(base, t_new, u, qcfg)
-        unit = adapter.transform_unit(base, t_new, u)
+            return adapter.transform_quant_unit(env["base"], t_new, u, qcfg)
+        unit = adapter.transform_unit(env["base"], t_new, u)
         return adapter.quant_unit(unit, qcfg)
 
-    @jax.jit
-    def step_single(key, transforms, fq_stack, u):
+    def step_body_single(key, transforms, fq_stack, u, env):
         # EXACTLY the legacy step: one proposal, unbatched evaluation — keeps
         # the K=1 trajectory bit-identical to the original hill climb.
         k_prop, _ = jax.random.split(key)
         t_u = _tree_slice(transforms, u)
         t_new = proposer(k_prop, inv.FFNTransform(*t_u), scfg.proposal)
-        unit = adapter.transform_unit(base, t_new, u)
+        unit = adapter.transform_unit(env["base"], t_new, u)
         unit_fq = adapter.quant_unit(unit, qcfg)
         fq_new = _tree_update(fq_stack, u, unit_fq)
-        ce, mse = eval_stack(fq_new)
+        ce, mse = eval_stack_fn(fq_new, env)
         loss = ce + alpha * mse
         return loss, ce, mse, fq_new, t_new
 
-    @jax.jit
-    def step_population(key, transforms, fq_stack, u):
+    def step_body_population(key, transforms, fq_stack, u, env):
         keys = candidate_keys(key, K)
         t_u = inv.FFNTransform(*_tree_slice(transforms, u))
         cands = [proposer(keys[i], t_u, scfg.proposal) for i in range(K)]
-        fq_news = [_tree_update(fq_stack, u, quant_candidate(t, u))
+        fq_news = [_tree_update(fq_stack, u, quant_candidate(t, u, env))
                    for t in cands]
         fq_batch = stack_trees(fq_news)          # (K, n_units, ...)
-        ce, mse = jax.vmap(eval_stack_fn)(fq_batch)  # ONE batched forward
-        loss = ce + alpha * mse
+        ce, mse = jax.vmap(lambda fq: eval_stack_fn(fq, env))(fq_batch)
+        loss = ce + alpha * mse                  # ONE batched forward above
         i = jnp.argmin(loss)
         return (loss[i], ce[i], mse[i], take_tree(fq_batch, i),
                 take_tree(stack_trees(cands), i))
 
-    step_fn = step_single if (K == 1 and not fused) else step_population
+    step_body = (step_body_single if (K == 1 and not fused)
+                 else step_body_population)
     schedule = anneal.temperature_schedule(
         getattr(scfg, "anneal", "geometric"),
         float(getattr(scfg, "temperature", 0.0)), scfg.steps)
+
+    stats = {"migrations": 0, "uphill_accepts": 0,
+             "proposals": scfg.steps * K * n_islands, "fused": fused,
+             "mapped": mapped}
+
+    if mapped:
+        return _run_mapped_islands(
+            SearchResult, adapter, scfg, env, step_body, schedule, stats,
+            transforms0, fq0, loss0, ce0, mse0, n_islands, migrate_every)
+
+    step_fn = jax.jit(
+        lambda key, transforms, fq_stack, u:
+            step_body(key, transforms, fq_stack, u, env))
 
     islands = []
     for i in range(n_islands):
@@ -166,8 +194,6 @@ def run_population_search(
             current_loss=loss0, best_loss=loss0, best_transforms=transforms0,
             best_fq=fq0, history=[(0, loss0, ce0, float(mse0), True)]))
 
-    stats = {"migrations": 0, "uphill_accepts": 0,
-             "proposals": scfg.steps * K * n_islands, "fused": fused}
     t_start = time.time()
     for step in range(1, scfg.steps + 1):
         T = schedule(step)
@@ -214,5 +240,196 @@ def run_population_search(
         final_loss=elite.best_loss,
         initial_loss=loss0,
         island_histories=[s.history for s in islands],
+        stats=stats,
+    )
+
+
+# ---------------------------------------------------------------------------
+# mapped mode: one island per shard of the ("data",) mesh
+# ---------------------------------------------------------------------------
+
+def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
+                        stats, transforms0, fq0, loss0, ce0, mse0,
+                        n_islands, migrate_every):
+    """The mapped island loop: one island per shard of the ("data",) mesh.
+
+    Split of responsibilities, chosen so "bit-for-bit equal to sequential"
+    is a property of the construction rather than a hope about the compiler:
+
+    - the per-island STEP (propose → transform → fake-quant → forward → loss)
+      runs the SAME ``jax.jit(step_body)`` program the sequential engine
+      runs, with the island's state committed to its shard's device — XLA
+      generates identical code for identical programs, so the per-step
+      scalars come out bit-identical island by island. (Running the step
+      *inside* shard_map instead was measurably NOT bit-stable: the
+      surrounding slice/gather graph perturbs how XLA fuses the loss
+      reductions, and ``optimization_barrier`` does not fence it off.)
+    - everything CROSS-island runs inside ``shard_map`` over the island axis
+      and is pure data movement, which is exact: the per-step scalar
+      exchange (an all-gather of each shard's (loss, ce, mse) row), and the
+      per-migration elite exchange — ``argmin_allgather`` for the scalar
+      race, ``elite_broadcast`` for the winner's state, a masked select for
+      the splice (``islands.migrate_on_mesh``).
+    - control stays on the host: every process replays every island's host
+      streams (unit picks, accept uniforms — cheap scalars), so the accept
+      logic and histories are computed identically everywhere, and each
+      process steps only the islands whose shard devices it owns.
+
+    Under a multi-process ``jax.distributed`` runtime the same loop runs
+    unchanged: hosts step their local islands independently and meet only at
+    the scalar exchange and migrations (the CI ``distributed`` lane pins 2
+    processes against the single-process sequential result).
+    """
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.dist import runtime
+    from repro.dist.compat import shard_map
+    from repro.dist.collectives import elite_broadcast
+    from repro.search.islands import gather_island_states, scatter_island_states
+
+    devs = jax.devices()
+    if n_islands != len(devs):
+        raise ValueError(
+            f"mapped=True runs one island per device shard: islands="
+            f"{n_islands} but the mesh has {len(devs)} global devices "
+            f"(match --islands to the device count, or force devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    mesh = Mesh(np.array(devs), ("data",))
+    shd = NamedSharding(mesh, P("data"))
+    pid = jax.process_index()
+    local = {i: d for i, d in enumerate(devs) if d.process_index == pid}
+    multiproc = jax.process_count() > 1
+
+    step_fn = jax.jit(
+        lambda key, transforms, fq_stack, u:
+            step_body(key, transforms, fq_stack, u, env))
+
+    # per-LOCAL-island state, committed to the island's shard device (the
+    # cross-host stacked layout only materializes for migrations/fetch)
+    t_loc = {i: jax.device_put(transforms0, d) for i, d in local.items()}
+    fq_loc = {i: jax.device_put(fq0, d) for i, d in local.items()}
+    bt_loc = dict(t_loc)
+    bfq_loc = dict(fq_loc)
+
+    exchange = jax.jit(shard_map(
+        lambda rows: jax.lax.all_gather(rows[0], "data"),
+        mesh=mesh, in_specs=(P("data"),), out_specs=P(), check_vma=False))
+
+    migrate_mapped = jax.jit(shard_map(
+        lambda bl, cl, t, fq, bt, bfq: migrate_on_mesh(
+            bl, cl, t, fq, bt, bfq, "data"),
+        mesh=mesh,
+        in_specs=(P("data"),) * 6,
+        out_specs=((P("data"),) * 4) + (P(),),
+        check_vma=False))
+
+    def put_shd(x):
+        return runtime.global_put(x, shd)
+
+    streams = [make_island_streams(scfg.seed, i) for i in range(n_islands)]
+    rngs = [s[0] for s in streams]
+    keys = [s[1] for s in streams]
+    cur = [loss0] * n_islands
+    best = [loss0] * n_islands
+    n_accept = [0] * n_islands
+    histories = [[(0, loss0, ce0, float(mse0), True)]
+                 for _ in range(n_islands)]
+
+    t_start = time.time()
+    for step in range(1, scfg.steps + 1):
+        T = schedule(step)
+        subs = [None] * n_islands
+        us = [None] * n_islands
+        for i in range(n_islands):
+            # replay EVERY island's streams so hosts stay in lock-step; only
+            # the local islands are evaluated
+            keys[i], sub = jax.random.split(keys[i])
+            subs[i] = sub
+            us[i] = int(rngs[i].integers(adapter.n_units))
+        outs = {}
+        u_dev = {}
+        for i, d in local.items():   # dispatch all, then fetch (async)
+            u_dev[i] = jax.device_put(jnp.int32(us[i]), d)
+            outs[i] = step_fn(jax.device_put(subs[i], d), t_loc[i],
+                              fq_loc[i], u_dev[i])
+        scal = np.zeros((n_islands, 3), np.float32)
+        for i, out in outs.items():
+            scal[i] = [float(out[0]), float(out[1]), float(out[2])]
+        if multiproc:
+            scal = np.asarray(exchange(put_shd(scal)))
+        for i in range(n_islands):
+            loss = float(scal[i, 0])
+            delta = loss - cur[i]
+            uniform = rngs[i].random() if T > 0.0 else None
+            accepted = anneal.accept(delta, T, uniform)
+            if accepted:
+                if delta > 0.0:
+                    stats["uphill_accepts"] += 1
+                cur[i] = loss
+                n_accept[i] += 1
+                if i in outs:
+                    fq_loc[i] = outs[i][3]
+                    t_loc[i] = _tree_update(t_loc[i], u_dev[i], outs[i][4])
+                if loss < best[i]:
+                    best[i] = loss
+                    if i in outs:
+                        bt_loc[i] = t_loc[i]
+                        bfq_loc[i] = fq_loc[i]
+            histories[i].append((step, loss, float(scal[i, 1]),
+                                 float(scal[i, 2]), accepted))
+        if migrate_every and n_islands > 1 and step % migrate_every == 0:
+            t_st = gather_island_states(t_loc, mesh, n_islands)
+            fq_st = gather_island_states(fq_loc, mesh, n_islands)
+            bt_st = gather_island_states(bt_loc, mesh, n_islands)
+            bfq_st = gather_island_states(bfq_loc, mesh, n_islands)
+            t_st, fq_st, bt_st, bfq_st, did = migrate_mapped(
+                put_shd(np.asarray(best, np.float32)),
+                put_shd(np.asarray(cur, np.float32)),
+                t_st, fq_st, bt_st, bfq_st)
+            t_loc = scatter_island_states(t_st, local)
+            fq_loc = scatter_island_states(fq_st, local)
+            bt_loc = scatter_island_states(bt_st, local)
+            bfq_loc = scatter_island_states(bfq_st, local)
+            if bool(np.asarray(did)):
+                # replay the decision on the host floats (identical f32
+                # comparisons to the ones the device just made)
+                src = int(np.argmin(np.asarray(best, np.float32)))
+                dst = int(np.argmax(np.asarray(cur, np.float32)))
+                cur[dst] = best[src]
+                if best[src] < best[dst]:
+                    best[dst] = best[src]
+                stats["migrations"] += 1
+        if scfg.log_every and step % scfg.log_every == 0:
+            rate = sum(n_accept) / (step * n_islands)
+            print(f"[search] step={step} best={min(best):.5f} "
+                  f"accept={rate:.2%} T={T:.4g} "
+                  f"({(time.time() - t_start):.1f}s) [mapped]")
+
+    elite = int(np.argmin(np.asarray(best, np.float32)))
+    bt_st = gather_island_states(bt_loc, mesh, n_islands)
+    bfq_st = gather_island_states(bfq_loc, mesh, n_islands)
+
+    def fetch_body(bt, bfq):
+        strip = lambda tr: jax.tree.map(lambda x: x[0], tr)  # noqa: E731
+        return (elite_broadcast(strip(bt), elite, "data"),
+                elite_broadcast(strip(bfq), elite, "data"))
+
+    best_t, best_fq = jax.jit(shard_map(
+        fetch_body, mesh=mesh, in_specs=(P("data"),) * 2,
+        out_specs=(P(), P()), check_vma=False))(bt_st, bfq_st)
+    # localize: the result contract is host-local arrays, same as sequential
+    best_t = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), best_t)
+    best_fq = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), best_fq)
+
+    stats["proposals_per_sec"] = stats["proposals"] / max(
+        time.time() - t_start, 1e-9)
+    return SearchResult(
+        params_q=adapter.install(env["params_base"], best_fq),
+        transforms=best_t,
+        history=histories[elite],
+        accept_rate=n_accept[elite] / max(scfg.steps, 1),
+        final_loss=best[elite],
+        initial_loss=loss0,
+        island_histories=histories,
         stats=stats,
     )

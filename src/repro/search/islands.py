@@ -9,15 +9,14 @@ island 0 of an N-island run walk identical trajectories until a migration
 actually rewrites someone's state — the reproducibility contract
 ``tests/test_search_engine.py`` pins.
 
-Multi-host design (not yet wired — the engine runs islands sequentially
-in-process): islands map 1:1 onto the data-parallel mesh axis, every host
-running its own island on its calibration shard, with the elite exchange as
-the only cross-host traffic — ``elite_over_mesh`` below is that building
-block (an all-gather of one scalar loss per island via ``repro.dist``
-collectives inside ``shard_map``; the winner's state then moves as one
-broadcast of the unit stacks). The counter-based key discipline means no
-other synchronization would be needed; hooking this into a
-``jax.distributed`` run is a ROADMAP item.
+Multi-host execution (``SearchConfig(mapped=True)``, wired by
+``engine._run_mapped_islands``): islands map 1:1 onto the shards of a 1-D
+("data",) mesh over every global device, stepping inside ``shard_map``. The
+counter-based key discipline means the only cross-shard traffic is the
+migration itself: ``elite_over_mesh`` (one scalar ``argmin_allgather``) picks
+the winner and ``dist.collectives.elite_broadcast`` moves its state —
+``migrate_on_mesh`` below is that migration's device body, semantically
+identical (including tie-breaks) to the host-side ``migrate``.
 """
 from __future__ import annotations
 
@@ -28,9 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.collectives import argmin_allgather
+from repro.dist.collectives import argmin_allgather, elite_broadcast
 
-__all__ = ["IslandState", "make_island_streams", "migrate", "elite_over_mesh"]
+__all__ = ["IslandState", "make_island_streams", "migrate", "elite_over_mesh",
+           "migrate_on_mesh", "gather_island_states", "scatter_island_states"]
 
 
 @dataclasses.dataclass
@@ -83,3 +83,87 @@ def elite_over_mesh(loss, axis_name: str):
     """(global min loss, owning shard index) — call inside ``shard_map`` over
     the data axis to pick the migration source across hosts."""
     return argmin_allgather(jnp.asarray(loss, jnp.float32), axis_name)
+
+
+def gather_island_states(local_states: dict, mesh, n_islands: int):
+    """{island index: state tree committed to that island's device} -> one
+    globally-stacked (n_islands, ...) tree laid out one-island-per-shard over
+    ``mesh``'s leading axis.
+
+    Pure data movement: each local leaf gains a length-1 leading axis on its
+    own device and the global array is assembled from those buffers via
+    ``jax.make_array_from_single_device_arrays`` — no host round-trip, no
+    arithmetic, and under a multi-process mesh each host contributes exactly
+    its addressable islands."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sharding = NamedSharding(mesh, P(mesh.axis_names[0]))
+    order = list(mesh.devices.flat)
+    idx = sorted(local_states)
+    trees = [local_states[i] for i in idx]
+
+    def combine(*leaves):
+        shape = (n_islands,) + leaves[0].shape
+        by_dev = {order[i]: leaf[None] for i, leaf in zip(idx, leaves)}
+        bufs = [by_dev[d] for d in sharding.addressable_devices_indices_map(
+            shape)]
+        return jax.make_array_from_single_device_arrays(shape, sharding, bufs)
+
+    return jax.tree.map(combine, *trees)
+
+
+def scatter_island_states(global_tree, local: dict):
+    """Inverse of ``gather_island_states``: split a globally-stacked tree
+    back into per-island trees on their shard devices ({index: device} ->
+    {index: tree}). Each island's row comes straight off its addressable
+    shard (``shard.data``), so this too moves no bytes across hosts."""
+    def take(dev):
+        def one(g):
+            for s in g.addressable_shards:
+                if s.device == dev:
+                    return s.data[0]
+            raise ValueError(f"no addressable shard on {dev}")
+        return one
+
+    return {i: jax.tree.map(take(d), global_tree) for i, d in local.items()}
+
+
+def migrate_on_mesh(best_loss, cur_loss, t_stack, fq_stack, bt, bfq,
+                    axis_name: str):
+    """Device body of one elite migration over ``axis_name`` (shard_map
+    context; every input carries a leading local island axis of size 1).
+
+    Semantically identical to the host-side ``migrate`` — same tie-breaks
+    (first minimum best as src, first maximum current as dst), same guard
+    (no-op when src is dst or the elite does not beat the worst's current),
+    same dst best-update rule. The scalar exchange is ONE
+    ``argmin_allgather``; the winner's state moves via ``elite_broadcast``.
+    Returns the four updated state trees (leading axis restored) plus a
+    replicated "did anything move" flag for the engine's stats.
+    """
+    def strip(tree):
+        return jax.tree.map(lambda x: x[0], tree)
+
+    def lift(tree):
+        return jax.tree.map(lambda x: x[None], tree)
+
+    gmin, src = elite_over_mesh(best_loss[0], axis_name)
+    cur_all = jax.lax.all_gather(cur_loss[0], axis_name)
+    dst = jnp.argmax(cur_all).astype(jnp.int32)
+    did = (src != dst) & (gmin < cur_all[dst])
+
+    elite_t = elite_broadcast(strip(bt), src, axis_name)
+    elite_fq = elite_broadcast(strip(bfq), src, axis_name)
+    i = jax.lax.axis_index(axis_name).astype(jnp.int32)
+    replace = did & (i == dst)
+    improve = replace & (gmin < best_loss[0])
+
+    new_t = jax.tree.map(lambda e, o: jnp.where(replace, e, o),
+                         elite_t, strip(t_stack))
+    new_fq = jax.tree.map(lambda e, o: jnp.where(replace, e, o),
+                          elite_fq, strip(fq_stack))
+    new_bt = jax.tree.map(lambda e, o: jnp.where(improve, e, o),
+                          elite_t, strip(bt))
+    new_bfq = jax.tree.map(lambda e, o: jnp.where(improve, e, o),
+                           elite_fq, strip(bfq))
+    return lift(new_t), lift(new_fq), lift(new_bt), lift(new_bfq), did

@@ -1,0 +1,140 @@
+"""Child process for tests/test_ckpt_sharded.py: the multi-device shard
+manifest property checks, run under a forced 4-CPU-device topology (the
+pytest process itself keeps the real 1-device backend by design — see
+tests/conftest.py).
+
+Prints one "OK <check>" line per passing check; any failure raises and the
+parent asserts on the exit code + markers.
+"""
+import os
+import sys
+
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.ckpt.checkpoint import (CheckpointManager,  # noqa: E402
+                                   restore_sharded_checkpoint,
+                                   save_sharded_checkpoint)
+from repro.core.quant import QTensor, QuantConfig, quantize_tensor  # noqa: E402
+from repro.dist.fault import remesh_restore  # noqa: E402
+from repro.dist.sharding import ShardingRules, param_specs, to_shardings  # noqa: E402
+
+
+def main(tmp: str) -> int:
+    devs = np.array(jax.devices())
+    assert len(devs) == 4, devs
+    mesh22 = Mesh(devs.reshape(2, 2), ("data", "model"))
+    mesh4 = Mesh(devs, ("data",))
+    mesh1 = Mesh(devs[:1], ("data",))
+
+    rng = np.random.default_rng(0)
+    w_full = rng.normal(size=(8, 16)).astype(np.float32)
+    qt = quantize_tensor(jax.numpy.asarray(
+        rng.normal(size=(64, 8)).astype(np.float32)),
+        QuantConfig(bits=2, group_size=32))
+    qt_full = jax.tree.map(np.asarray, qt)
+    tree = {
+        "w": jax.device_put(w_full, NamedSharding(mesh22, P("data", "model"))),
+        "qt": jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(mesh22, P(None, "model"))),
+            qt),
+        "nested": {"t": (jax.numpy.arange(4.0), None)},
+    }
+    d = os.path.join(tmp, "ck")
+    save_sharded_checkpoint(d, 3, tree, extra={"note": "prop"})
+
+    def verify(arr, full):
+        for s in arr.addressable_shards:
+            np.testing.assert_array_equal(np.asarray(s.data), full[s.index])
+
+    # --- restore onto a (4,) mesh, QTensor component specs preserved -------
+    sh4 = {
+        "w": NamedSharding(mesh4, P("data", None)),
+        "qt": QTensor(NamedSharding(mesh4, P(None, "data")),
+                      NamedSharding(mesh4, P(None, "data")),
+                      NamedSharding(mesh4, P(None, "data")),
+                      qt.bits, qt.group_size, qt.shape),
+        "nested": {"t": (NamedSharding(mesh4, P("data")), None)},
+    }
+    r4, m = restore_sharded_checkpoint(d, 3, sh4)
+    assert m["format"] == 2 and m["extra"]["note"] == "prop"
+    verify(r4["w"], w_full)
+    assert r4["w"].sharding.is_equivalent_to(sh4["w"], 2)
+    verify(r4["qt"].packed, qt_full.packed)
+    verify(r4["qt"].scale, qt_full.scale)
+    verify(r4["qt"].zero, qt_full.zero)
+    assert r4["qt"].packed.sharding.is_equivalent_to(sh4["qt"].packed, 2)
+    assert r4["qt"].bits == qt.bits and r4["qt"].group_size == qt.group_size
+    assert r4["qt"].shape == qt.shape
+    np.testing.assert_allclose(np.asarray(r4["qt"].dequantize()),
+                               np.asarray(qt.dequantize()))
+    assert r4["nested"]["t"][1] is None
+    print("OK remesh_2x2_to_4")
+
+    # --- restore onto a single-device (1,) mesh ----------------------------
+    sh1 = {"w": NamedSharding(mesh1, P()), "qt": None,
+           "nested": {"t": (None, None)}}
+    r1, _ = restore_sharded_checkpoint(d, 3, sh1)
+    np.testing.assert_array_equal(np.asarray(r1["w"]), w_full)
+    np.testing.assert_array_equal(np.asarray(r1["qt"].packed), qt_full.packed)
+    print("OK remesh_2x2_to_1")
+
+    # --- shardings=None: host-local assembly -------------------------------
+    r0, _ = restore_sharded_checkpoint(d, 3, None)
+    np.testing.assert_array_equal(np.asarray(r0["w"]), w_full)
+    print("OK local_assembly")
+
+    # --- dist.sharding rules round-trip: save under param_specs shardings --
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("opt-tiny").reduced(n_layers=2, d_model=32, d_ff=64,
+                                         vocab_size=128, n_heads=2,
+                                         n_kv_heads=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rules = ShardingRules(mesh22, cfg)
+    sh = to_shardings(mesh22, param_specs(rules, params))
+    params_sh = jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x, params, sh,
+        is_leaf=lambda x: x is None)
+    mgr = CheckpointManager(os.path.join(tmp, "mgr"), sharded=True)
+    mgr.save(7, params_sh)
+    mgr.wait()
+    rules4 = ShardingRules(mesh4, cfg)
+    sh4p = to_shardings(mesh4, param_specs(rules4, params))
+    restored, m2 = remesh_restore(mgr, sh4p)
+    assert m2["step"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("OK manager_param_specs_roundtrip")
+
+    # --- corrupted shard detection -----------------------------------------
+    import pathlib
+    f = pathlib.Path(d) / "step_00000003" / "host0000.npz"
+    raw = bytearray(f.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    try:
+        restore_sharded_checkpoint(d, 3, None)
+        raise SystemExit("corruption NOT detected")
+    except IOError as e:
+        assert "host0000.npz" in str(e), e
+    print("OK corruption_names_file")
+
+    # --- missing host shard manifest = corruption --------------------------
+    (pathlib.Path(d) / "step_00000003" / "shards_host0000.json").unlink()
+    try:
+        restore_sharded_checkpoint(d, 3, None)
+        raise SystemExit("missing shard manifest NOT detected")
+    except IOError as e:
+        assert "shards_host0000.json" in str(e), e
+    print("OK missing_manifest_detected")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1]))
