@@ -153,6 +153,61 @@ def run():
                f"kv_page_reads_per_token={Hkv}_of_{H}={rep}x_cut="
                f"{us_u / max(us_f, 1e-9):.2f}x_cpu")
 
+        # multi-page inner grid axis (pages_per_block=MP): the fused kernel's
+        # per-page (rep, psz) matmul is below MXU granularity for small rep;
+        # staging MP pages per online-softmax update replaces MP tiny matmuls
+        # with one (rep, MP*psz) one. CPU proxy: an online-softmax scan over
+        # single pages vs over MP-page blocks — same math, matmul granularity
+        # is the only variable.
+        def make_blocked(mp):
+            nblk = max_pages // mp
+
+            def f(q, kp, vp, bt, lens):
+                Bq, Hq, D = q.shape
+                ps = kp.shape[1]
+                kf = kp[bt].reshape(Bq, nblk, mp * ps, Hkv, D)
+                vf = vp[bt].reshape(Bq, nblk, mp * ps, Hkv, D)
+                qg = q.reshape(Bq, Hkv, Hq // Hkv, D)
+
+                def body(carry, xs):
+                    o, m, l, blk = carry
+                    kb, vb = xs                       # (B, mp*ps, Hkv, D)
+                    s = jnp.einsum("bgrd,bsgd->bgrs", qg, kb) * D ** -0.5
+                    pos = blk * (mp * ps) + jnp.arange(mp * ps)
+                    msk = pos[None, :] < lens[:, None]
+                    s = jnp.where(msk[:, None, None], s, -1e30)
+                    m2 = jnp.maximum(m, s.max(-1))
+                    prob = jnp.where(msk[:, None, None],
+                                     jnp.exp(s - m2[..., None]), 0.0)
+                    corr = jnp.exp(m - m2)
+                    o = o * corr[..., None] + jnp.einsum("bgrs,bsgd->bgrd",
+                                                         prob, vb)
+                    return (o, m2, l * corr + prob.sum(-1), blk + 1), None
+
+                init = (jnp.zeros((Bq, Hkv, Hq // Hkv, D)),
+                        jnp.full((Bq, Hkv, Hq // Hkv), -1e30),
+                        jnp.zeros((Bq, Hkv, Hq // Hkv)), jnp.int32(0))
+                (o, m, l, _), _ = jax.lax.scan(
+                    body, init, (kf.swapaxes(0, 1), vf.swapaxes(0, 1)))
+                return (o / jnp.maximum(l, 1e-30)[..., None]
+                        ).reshape(Bq, Hq, D)
+            return jax.jit(f)
+
+        one = make_blocked(1)
+        blk4 = make_blocked(4)
+        np.testing.assert_allclose(
+            np.asarray(one(q, kp, vp, bt, lens)),
+            np.asarray(blk4(q, kp, vp, bt, lens)), atol=1e-5)
+        _, us_1 = timed(lambda: jax.block_until_ready(
+            one(q, kp, vp, bt, lens)), repeat=5)
+        _, us_4 = timed(lambda: jax.block_until_ready(
+            blk4(q, kp, vp, bt, lens)), repeat=5)
+        record(f"kernel/paged_decode_gqa/H{H}kv{Hkv}/fused_mp1", us_1,
+               f"matmul_shape={rep}x{psz}_per_update")
+        record(f"kernel/paged_decode_gqa/H{H}kv{Hkv}/fused_mp4", us_4,
+               f"matmul_shape={rep}x{4 * psz}_per_update="
+               f"{us_1 / max(us_4, 1e-9):.2f}x_cpu")
+
     # chunked paged prefill: prompt K/V written straight into pages, chunk
     # attention streamed page-by-page from the pool. ``derived``: admit
     # tokens/sec through the attention path plus the copy the v1 admit no

@@ -16,12 +16,14 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="fewer search steps (CI-speed run)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,table2,table3,table4,fig1,kernels")
+                    help="comma-separated subset: table1,table2,table3,table4,"
+                         "fig1,kernels,serving")
     args = ap.parse_args()
     steps = 120 if args.fast else 400
 
     from benchmarks import (table1_main, table2_ablation, table3_bits,
-                            table4_actmatch, fig1_curves, kernel_bench)
+                            table4_actmatch, fig1_curves, kernel_bench,
+                            serving_bench)
     jobs = {
         "table1": lambda: table1_main.run(search_steps=steps),
         "table2": lambda: table2_ablation.run(search_steps=max(steps * 3 // 4, 80)),
@@ -29,6 +31,7 @@ def main() -> None:
         "table4": lambda: table4_actmatch.run(search_steps=max(steps * 3 // 4, 80)),
         "fig1": lambda: fig1_curves.run(search_steps=steps),
         "kernels": kernel_bench.run,
+        "serving": serving_bench.run,
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

@@ -1,0 +1,109 @@
+"""Serving-path benchmark: the many-tenant shared-prefix trace, sharing
+off vs on.
+
+Runs the SAME deterministic trace (``repro.serving.trace.build_trace`` —
+shared system pages + per-tenant template pages + short random tails, with
+exact-duplicate requests sprinkled in) through the paged server twice:
+prefix cache disabled, then enabled. Asserts the tentpole's acceptance
+properties inline — outputs token-identical, >= 50% of prefill tokens
+aliased instead of recomputed, allocator fully drained (no page leaked) —
+and records them plus p50/p99 TTFT in
+``artifacts/benchmarks/BENCH_serving.json`` so CI tracks the sharing win
+across commits.
+"""
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ART, emit
+from repro.configs import get_config
+from repro.core.quant import QuantConfig
+from repro.launch.serve import PagedServer, Request
+from repro.models import init_params
+from repro.quantized.qmodel import pack_model
+from repro.serving.trace import build_trace
+
+N_TENANTS = 8
+PER_TENANT = 3
+PAGE_SIZE = 16
+MAX_NEW = 8
+
+
+def _requests(trace):
+    return [Request(prompt=t["prompt"], max_new=t["max_new"], seed=t["seed"],
+                    tenant=t["tenant"], priority=t["priority"])
+            for t in trace]
+
+
+def _serve(params_q, cfg, trace, *, prefix_cache):
+    server = PagedServer(params_q, cfg, max_batch=8, page_size=PAGE_SIZE,
+                         n_pages=96, max_len=128, prefix_cache=prefix_cache)
+    reqs = _requests(trace)
+    t0 = time.time()
+    outs = server.generate(reqs)
+    wall = time.time() - t0
+    alloc = server.cache.allocator
+    leaked = alloc.n_pages - alloc.reserved - alloc.num_free
+    return server, outs, wall, leaked
+
+
+def run():
+    rows = []
+
+    def record(name, us, derived):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    cfg = get_config("opt-tiny").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab_size=256, n_heads=4,
+        n_kv_heads=2, max_seq_len=256)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params_q = pack_model(params, QuantConfig(bits=2, group_size=32))
+
+    trace = build_trace(cfg.vocab_size, n_tenants=N_TENANTS,
+                        per_tenant=PER_TENANT, page_size=PAGE_SIZE,
+                        max_new=MAX_NEW)
+    tag = f"trace{N_TENANTS}x{PER_TENANT}"
+
+    off, outs_off, wall_off, leak_off = _serve(params_q, cfg, trace,
+                                               prefix_cache=False)
+    on, outs_on, wall_on, leak_on = _serve(params_q, cfg, trace,
+                                           prefix_cache=True)
+
+    # the tentpole's acceptance properties, asserted where the numbers are
+    # produced so a regressed BENCH_serving.json can never be published
+    assert outs_on == outs_off, "prefix sharing changed generated tokens"
+    assert leak_off == 0 and leak_on == 0, \
+        f"page leak: off={leak_off} on={leak_on}"
+    rep = on.sharing_report()
+    total = rep["prefill_tokens"] + rep["prefill_tokens_saved"]
+    assert off.batcher.stats["prefill_tokens"] == total, \
+        "sharing-on trace saw a different token workload than sharing-off"
+    assert rep["saved_frac"] >= 0.5, \
+        f"prefill_tokens_saved {rep['prefill_tokens_saved']}/{total} < 50%"
+
+    record(f"serving/prefix_cache/{tag}/off", wall_off * 1e6,
+           f"prefill_tokens={off.batcher.stats['prefill_tokens']};"
+           f"leaked_pages={leak_off}")
+    record(f"serving/prefix_cache/{tag}/on", wall_on * 1e6,
+           f"prefill_tokens_saved={rep['prefill_tokens_saved']}"
+           f"_of_{total}={rep['saved_frac']:.0%};"
+           f"aliased_pages={rep['aliased_pages']};"
+           f"dedup_admits={rep['dedup_admits']};"
+           f"cow_forks={rep['cow_forks']};"
+           f"leaked_pages={leak_on};outputs=token_identical")
+    off_rep = off.sharing_report()
+    for p in ("p50", "p99"):
+        record(f"serving/ttft/{p}", rep[f"ttft_{p}_s"] * 1e6,
+               f"sharing_off_{p}_us={off_rep[f'ttft_{p}_s']*1e6:.0f}")
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "BENCH_serving.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -509,6 +509,18 @@ def latest_step(directory) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _host_id_of(name: str) -> int:
+    """Host id embedded in a shard filename (``host0003.npz`` /
+    ``shards_host0003.json`` -> 3); -1 if the name doesn't parse."""
+    stem = name.split(".")[0]
+    digits = stem[len("shards_host"):] if stem.startswith("shards_host") \
+        else stem[len("host"):]
+    try:
+        return int(digits)
+    except ValueError:
+        return -1
+
+
 class CheckpointManager:
     """Async save + retention. ``save()`` snapshots leaves to host memory
     synchronously (donation-safe) and returns; file writes run on a
@@ -516,8 +528,10 @@ class CheckpointManager:
 
     ``sharded=True`` switches to the format-2 addressable-shard writer: every
     process must run ``save()``/``wait()`` at the same step, and ``restore``
-    takes target shardings for the elastic re-mesh. Retention (gc) is
-    process-0-only in that mode so hosts never race on unlinks."""
+    takes target shardings for the elastic re-mesh. Retention (gc) runs in
+    PARALLEL in that mode: each host unlinks its own shard files (process 0
+    uncommits the manifest first and sweeps shards of shrunk-away hosts), so
+    gc cost per host stays constant as the mesh grows."""
 
     def __init__(self, directory, keep: int = 3, *, sharded: bool = False):
         self.dir = pathlib.Path(directory)
@@ -574,10 +588,37 @@ class CheckpointManager:
         return restore_checkpoint(self.dir, step, verify=verify)
 
     def _gc(self):
-        if self.sharded and jax.process_index() != 0:
-            return
         steps = sorted(p for p in self.dir.glob("step_*"))
-        for p in steps[:-self.keep]:
-            for f in p.iterdir():
-                f.unlink()
-            p.rmdir()
+        drop = steps[:-self.keep]
+        if not self.sharded:
+            for p in drop:
+                for f in p.iterdir():
+                    f.unlink()
+                p.rmdir()
+            return
+        # Sharded retention runs on EVERY host's writer thread: each host
+        # unlinks its own shard files, so gc cost per host is constant
+        # instead of process 0 serially unlinking O(hosts) files per step.
+        pid = jax.process_index()
+        nproc = jax.process_count()
+        for p in drop:
+            if pid == 0:
+                # uncommit FIRST: list_steps/restore key on the manifest, so
+                # once it is gone no reader can race the per-host unlinks
+                # below into a partial restore
+                (p / "manifest.json").unlink(missing_ok=True)
+            (p / f"host{pid:04d}.npz").unlink(missing_ok=True)
+            (p / f"shards_host{pid:04d}.json").unlink(missing_ok=True)
+            if pid == 0:
+                # sweep shards of host ids beyond the current topology (a
+                # save from a larger mesh leaves files no live process owns)
+                for f in p.glob("*host*.npz"):
+                    if _host_id_of(f.name) >= nproc:
+                        f.unlink(missing_ok=True)
+                for f in p.glob("shards_host*.json"):
+                    if _host_id_of(f.name) >= nproc:
+                        f.unlink(missing_ok=True)
+            try:
+                p.rmdir()   # whichever host unlinks last wins the rmdir;
+            except OSError:  # still-populated (peer mid-gc) is fine — the
+                pass         # directory is retried on the next gc cycle

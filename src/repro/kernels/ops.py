@@ -77,10 +77,12 @@ def flash_decode(q, k, v, k_scale=None, v_scale=None, *, kv_len=None,
 
 
 @functools.partial(jax.jit, static_argnames=("normalize", "use_pallas",
-                                             "fused_gqa"))
+                                             "fused_gqa",
+                                             "gqa_pages_per_block"))
 def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, k_scale=None,
                  v_scale=None, *, normalize: bool = True,
-                 use_pallas: bool = True, fused_gqa: bool = True):
+                 use_pallas: bool = True, fused_gqa: bool = True,
+                 gqa_pages_per_block: int = 1):
     """Paged one-token decode attention over a block-table page pool.
 
     The continuous-batching hot path: q (B, H, Dh) attends over the pages
@@ -92,7 +94,11 @@ def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, k_scale=None,
     (B, Hkv, P)-grid kernel that loads each KV head's page once for its
     whole query-head group — decode HBM reads drop by the GQA ratio. MHA
     shapes (H == Hkv) always use the per-query-head grid, so pre-GQA callers
-    see bit-identical outputs.
+    see bit-identical outputs. ``gqa_pages_per_block > 1`` further batches
+    the fused kernel's online-softmax update over page blocks (the
+    multi-page inner grid axis — DMA of the next pages overlaps one
+    MXU-shaped (rep, MP*psz) matmul); the default 1 keeps the single-page
+    grid bit-for-bit.
     """
     if not use_pallas:
         return ref.paged_decode_ref(q, k_pages, v_pages, block_tables,
@@ -103,7 +109,8 @@ def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, k_scale=None,
         return paged_decode_gqa_pallas(q, k_pages, v_pages, block_tables,
                                        seq_lens, k_scale, v_scale,
                                        normalize=normalize,
-                                       interpret=not on_tpu())
+                                       interpret=not on_tpu(),
+                                       pages_per_block=gqa_pages_per_block)
     return paged_decode_pallas(q, k_pages, v_pages, block_tables, seq_lens,
                                k_scale, v_scale, normalize=normalize,
                                interpret=not on_tpu())

@@ -33,6 +33,16 @@ Two grids cover the GQA axis:
   batched against it in VMEM ((rep, psz) score tile on the MXU), cutting
   decode's dominant HBM term — KV page reads — by the GQA ratio. Query heads
   are grouped h // rep = KV head, so the (1, rep, Dh) q block is contiguous.
+
+With ``pages_per_block > 1`` the fused kernel adds a MULTI-PAGE INNER AXIS:
+grid (B, Hkv, ceil(P / MP), MP). Each inner step stages one DMA'd page into
+a (MP, psz, Dh) VMEM scratch tile and only the LAST inner step runs the
+(rep, MP*psz) score matmul + online-softmax update. For small ``rep`` the
+per-page (rep, psz) matmul is far below MXU granularity, so the per-page
+grid serialises tiny matmuls behind each page's DMA; batching MP pages per
+update lets Pallas's inner-axis pipelining overlap the next pages' DMA with
+one better-shaped matmul. ``pages_per_block=1`` is the default and keeps the
+original single-page grid bit-for-bit.
 """
 from __future__ import annotations
 
@@ -212,14 +222,85 @@ def _kernel_gqa(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
             o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
 
 
+def _kernel_gqa_mp(bt_ref, sl_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                   o_ref, m_ref, l_ref, k_buf, v_buf, *, page_size,
+                   pages_per_block, quantized, normalize):
+    b = pl.program_id(0)
+    blk = pl.program_id(2)                       # outer page-block
+    i = pl.program_id(3)                         # inner page within block
+    mp = pages_per_block
+    n_live = jnp.maximum((sl_ref[b] + page_size - 1) // page_size, 1)
+    p = blk * mp + i                             # logical page slot
+
+    @pl.when((blk == 0) & (i == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # stage this inner step's page into the scratch tile (dequantized f32);
+    # dead pages are ZEROED, not skipped — their positions are masked out of
+    # the softmax below, but a zero row costs nothing while stale scratch
+    # content could be NaN-poisoned garbage that 0-weight cannot cancel
+    @pl.when(p < n_live)
+    def _stage():
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            kb = kb * ks_ref[0, :, 0][:, None].astype(jnp.float32)
+            vb = vb * vs_ref[0, :, 0][:, None].astype(jnp.float32)
+        k_buf[i] = kb
+        v_buf[i] = vb
+
+    @pl.when(p >= n_live)
+    def _stage_dead():
+        k_buf[i] = jnp.zeros_like(k_buf[i])
+        v_buf[i] = jnp.zeros_like(v_buf[i])
+
+    # one online-softmax update per PAGE BLOCK: the (rep, mp*psz) matmul
+    # replaces mp undersized (rep, psz) ones, and runs while the next
+    # block's pages are already in flight on the inner grid axis
+    @pl.when((i == mp - 1) & (blk * mp < n_live))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (rep, Dh)
+        dh = q.shape[-1]
+        kk = k_buf[...].reshape(mp * page_size, -1)      # (mp*psz, Dh)
+        vv = v_buf[...].reshape(mp * page_size, -1)
+        s = (q @ kk.T) * (dh ** -0.5)                    # (rep, mp*psz)
+        pos = blk * mp * page_size + jax.lax.iota(jnp.int32, mp * page_size)
+        mask = pos < sl_ref[b]
+        s = jnp.where(mask[None, :], s, NEG)
+
+        m_prev = m_ref[0]
+        l_prev = l_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        prob = jnp.where(mask[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        o_ref[0] = o_ref[0] * corr[:, None] + prob @ vv
+        m_ref[0] = m_new
+        l_ref[0] = l_prev * corr + jnp.sum(prob, axis=-1)
+
+    if normalize:
+        @pl.when((blk == pl.num_programs(2) - 1) & (i == mp - 1))
+        def _finish():
+            o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
 def paged_decode_gqa_pallas(q, k_pages, v_pages, block_tables, seq_lens,
                             k_scale=None, v_scale=None, *,
-                            normalize: bool = True, interpret: bool = False):
+                            normalize: bool = True, interpret: bool = False,
+                            pages_per_block: int = 1):
     """Fused-GQA paged decode: same contract as ``paged_decode_pallas``
     (q (B, H, Dh) over (N, page_size, Hkv, Dh) pools, block-table gather,
     optional int8 scales, optional LSE partials) with a (B, Hkv, P) grid —
     each KV head's page is DMA'd once and its ``H // Hkv`` query heads are
     reduced against it in VMEM.
+
+    ``pages_per_block > 1`` switches to the multi-page inner-axis grid
+    (B, Hkv, ceil(P / MP), MP): pages stage into a VMEM scratch tile and one
+    (rep, MP*psz) matmul per block overlaps the next pages' DMA — the small-
+    ``rep`` regime where per-page matmuls are below MXU granularity.
+    ``pages_per_block=1`` keeps the original grid bit-for-bit.
     """
     B, H, Dh = q.shape
     n_pages, page_size, Hkv, _ = k_pages.shape
@@ -235,6 +316,13 @@ def paged_decode_gqa_pallas(q, k_pages, v_pages, block_tables, seq_lens,
     def _live_page(bt, sl, b, p):
         n_live = jnp.maximum((sl[b] + page_size - 1) // page_size, 1)
         return bt[b, jnp.minimum(p, n_live - 1)]
+
+    if pages_per_block > 1:
+        return _gqa_multipage_call(
+            q, k_pages, v_pages, block_tables, seq_lens, k_scale, v_scale,
+            normalize=normalize, interpret=interpret,
+            pages_per_block=pages_per_block, quantized=quantized,
+            live_page=_live_page)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -265,6 +353,63 @@ def paged_decode_gqa_pallas(q, k_pages, v_pages, block_tables, seq_lens,
     out, m, l = pl.pallas_call(
         functools.partial(_kernel_gqa, page_size=page_size,
                           quantized=quantized, normalize=normalize),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages, k_scale, v_scale)
+    if normalize:
+        return out
+    return out, m, l
+
+
+def _gqa_multipage_call(q, k_pages, v_pages, block_tables, seq_lens, k_scale,
+                        v_scale, *, normalize, interpret, pages_per_block,
+                        quantized, live_page):
+    """The (B, Hkv, n_blocks, MP) grid behind ``pages_per_block > 1``."""
+    B, H, Dh = q.shape
+    page_size = k_pages.shape[1]
+    Hkv = k_pages.shape[2]
+    rep = H // Hkv
+    P = block_tables.shape[1]
+    mp = pages_per_block
+    n_blocks = -(-P // mp)
+
+    def kv_map(b, g, blk, i, bt, sl):
+        # the inner axis walks one page per step; dead slots clamp to the
+        # last live page so consecutive dead steps issue no fresh DMA
+        return (live_page(bt, sl, b, blk * mp + i), 0, g, 0)
+
+    def sc_map(b, g, blk, i, bt, sl):
+        return (live_page(bt, sl, b, blk * mp + i), 0, g)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_blocks, mp),
+        in_specs=[
+            pl.BlockSpec((1, rep, Dh), lambda b, g, blk, i, bt, sl: (b, g, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh), kv_map),
+            pl.BlockSpec((1, page_size, 1, Dh), kv_map),
+            pl.BlockSpec((1, page_size, 1), sc_map),
+            pl.BlockSpec((1, page_size, 1), sc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rep, Dh), lambda b, g, blk, i, bt, sl: (b, g, 0)),
+            pl.BlockSpec((1, rep), lambda b, g, blk, i, bt, sl: (b, g)),
+            pl.BlockSpec((1, rep), lambda b, g, blk, i, bt, sl: (b, g)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((mp, page_size, Dh), jnp.float32),   # staged K pages
+            pltpu.VMEM((mp, page_size, Dh), jnp.float32),   # staged V pages
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel_gqa_mp, page_size=page_size,
+                          pages_per_block=mp, quantized=quantized,
+                          normalize=normalize),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),

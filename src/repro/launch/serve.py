@@ -6,9 +6,14 @@ Default flow (``PagedServer``): requests stream through
 ``repro.serving.ContinuousBatcher`` — per-request prefill scatters K/V into a
 fixed-size page pool, one jitted decode step advances every live sequence at
 its own depth (attention reads pages through the block-table Pallas kernel),
-finished sequences hand their pages back between steps, and exhaustion
-preempts the newest sequence. Weights stay packed QTensors throughout
-(dequant-on-the-fly in each scan body; the fused quant_matmul kernel on TPU).
+finished sequences hand their page references back between steps, and
+exhaustion preempts the scheduler's victim (FIFO: the newest sequence).
+Pages are refcounted and content-addressed: shared prompt prefixes are
+aliased from the prefix cache at admit instead of re-prefilled
+(``--no-prefix-cache`` disables), and ``--scheduler slo`` turns on priority
+admission with per-tenant page quotas (``--tenant-quota``). Weights stay
+packed QTensors throughout (dequant-on-the-fly in each scan body; the fused
+quant_matmul kernel on TPU).
 
 ``BatchedServer`` (``--legacy``) keeps the old fixed-slot recycling loop for
 comparison: it pads every batch to the longest member and holds max_len-deep
@@ -30,7 +35,8 @@ from repro.core.quant import QuantConfig
 from repro.launch.steps import make_serve_step
 from repro.models import init_params, prefill
 from repro.quantized.qmodel import pack_model, packed_bytes, dense_bytes
-from repro.serving import ContinuousBatcher, PagedKVCache, PagedRequest
+from repro.serving import (ContinuousBatcher, PagedKVCache, PagedRequest,
+                           make_scheduler)
 
 
 @dataclasses.dataclass
@@ -41,6 +47,8 @@ class Request:
     temperature: float = 0.0        # <= 0: greedy (paged server only)
     top_k: int = 0                  # 0: unrestricted
     seed: int = 0                   # per-request sample stream
+    tenant: str = "default"         # quota bucket (SLO scheduler)
+    priority: int = 0               # admission order (SLO scheduler)
 
 
 class BatchedServer:
@@ -92,27 +100,67 @@ class PagedServer:
     dense server's cost was batch x max_len whether used or not);
     ``max_pages_per_seq`` bounds a single sequence. Accepts the same
     ``Request`` objects as ``BatchedServer``.
+
+    ``prefix_cache`` (default on) shares pages between requests: full-page
+    prompt runs already in the pool are aliased at admit (zero prefill) and
+    identical in-flight requests decode from one copy (COW-forked at the
+    first diverging write) — outputs stay token-identical to sharing
+    disabled. ``scheduler`` picks the admission/eviction policy: ``"fifo"``
+    (legacy-identical default), ``"slo"`` (uses ``Request.tenant`` /
+    ``priority`` with ``tenant_quota`` pages per tenant), or any
+    ``serving.Scheduler`` instance.
     """
 
     def __init__(self, params_q, cfg, max_batch: int = 4, page_size: int = 16,
                  n_pages: Optional[int] = None, max_len: int = 512,
-                 use_pallas: bool = True, prefill_chunk_pages: int = 4):
+                 use_pallas: bool = True, prefill_chunk_pages: int = 4,
+                 prefix_cache: bool = True, scheduler="fifo",
+                 tenant_quota: Optional[int] = None,
+                 gqa_pages_per_block: int = 1):
         pages_per_seq = -(-max_len // page_size)
         if n_pages is None:
             n_pages = max_batch * pages_per_seq + 1  # +1 null page
         self.cfg = cfg
         self.cache = PagedKVCache(cfg, n_pages=n_pages, page_size=page_size,
                                   max_pages_per_seq=pages_per_seq)
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, tenant_quota=tenant_quota)
         self.batcher = ContinuousBatcher(params_q, cfg, self.cache,
                                          max_batch=max_batch,
                                          use_pallas=use_pallas,
-                                         prefill_chunk_pages=prefill_chunk_pages)
+                                         prefill_chunk_pages=prefill_chunk_pages,
+                                         scheduler=scheduler,
+                                         prefix_cache=prefix_cache,
+                                         gqa_pages_per_block=gqa_pages_per_block)
 
     def generate(self, requests: List[Request]):
         paged = [PagedRequest(prompt=np.asarray(r.prompt, np.int32),
                               max_new=r.max_new, temperature=r.temperature,
-                              top_k=r.top_k, seed=r.seed) for r in requests]
+                              top_k=r.top_k, seed=r.seed, tenant=r.tenant,
+                              priority=r.priority) for r in requests]
         return self.batcher.run(paged)
+
+    def sharing_report(self) -> dict:
+        """Prefix-sharing + latency stats for the run(s) so far."""
+        st = self.batcher.stats
+        total = st["prefill_tokens"] + st["prefill_tokens_saved"]
+        ttft = sorted(self.batcher.ttft_s)
+
+        def pct(p):
+            if not ttft:
+                return 0.0
+            return ttft[min(int(p * (len(ttft) - 1)), len(ttft) - 1)]
+
+        return {
+            "prefill_tokens": st["prefill_tokens"],
+            "prefill_tokens_saved": st["prefill_tokens_saved"],
+            "saved_frac": st["prefill_tokens_saved"] / total if total else 0.0,
+            "aliased_pages": st["aliased_pages"],
+            "dedup_admits": st["dedup_admits"],
+            "cow_forks": st["cow_forks"],
+            "ttft_p50_s": pct(0.50),
+            "ttft_p99_s": pct(0.99),
+        }
 
 
 def main():
@@ -132,6 +180,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-cache page sharing across requests")
+    ap.add_argument("--scheduler", default="fifo", choices=("fifo", "slo"),
+                    help="admission/eviction policy (slo: priority + quotas)")
+    ap.add_argument("--tenant-quota", type=int, default=None,
+                    help="max pages a tenant's live requests may hold (slo)")
+    ap.add_argument("--gqa-pages-per-block", type=int, default=1,
+                    help="pages staged per fused-GQA decode block (1 keeps "
+                         "the single-page grid bit-for-bit)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="spread requests round-robin over N tenants, each "
+                         "sharing one system-prompt prefix")
     ap.add_argument("--legacy", action="store_true",
                     help="fixed-slot BatchedServer instead of the paged path")
     args = ap.parse_args()
@@ -146,10 +206,24 @@ def main():
           f"({db/pb:.1f}x smaller)")
 
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)).astype(np.int32),
-                    max_new=args.max_new, temperature=args.temperature,
-                    top_k=args.top_k, seed=i)
-            for i in range(args.requests)]
+    # a shared system prompt (two pages) in front of every request makes the
+    # prefix cache visible in the default run; --tenants > 1 adds a shorter
+    # per-tenant template on top (the many-tenant trace shape)
+    sys_prompt = rng.integers(0, cfg.vocab_size,
+                              size=2 * args.page_size).astype(np.int32)
+    tenant_tpl = {t: rng.integers(0, cfg.vocab_size,
+                                  size=args.page_size).astype(np.int32)
+                  for t in range(args.tenants)}
+    reqs = []
+    for i in range(args.requests):
+        t = i % args.tenants
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=rng.integers(4, 12)).astype(np.int32)
+        reqs.append(Request(
+            prompt=np.concatenate([sys_prompt, tenant_tpl[t], tail]),
+            max_new=args.max_new, temperature=args.temperature,
+            top_k=args.top_k, seed=i, tenant=f"tenant{t}",
+            priority=t % 3))
     if args.legacy:
         server = BatchedServer(params_q, cfg, batch_size=args.batch,
                                max_len=args.max_len)
@@ -157,7 +231,11 @@ def main():
         server = PagedServer(params_q, cfg, max_batch=args.batch,
                              page_size=args.page_size, n_pages=args.pages,
                              max_len=args.max_len,
-                             prefill_chunk_pages=args.prefill_chunk_pages)
+                             prefill_chunk_pages=args.prefill_chunk_pages,
+                             prefix_cache=not args.no_prefix_cache,
+                             scheduler=args.scheduler,
+                             tenant_quota=args.tenant_quota,
+                             gqa_pages_per_block=args.gqa_pages_per_block)
         pool = server.cache.pool_bytes()
         dense = server.cache.dense_equiv_bytes(args.batch, args.max_len)
         print(f"[serve] page pool: {server.cache.n_pages} x "
@@ -171,6 +249,13 @@ def main():
           f"({n_tok/dt:.1f} tok/s)")
     if not args.legacy:
         print(f"[serve] batcher stats: {server.batcher.stats}")
+        rep = server.sharing_report()
+        print(f"[serve] sharing: {rep['prefill_tokens_saved']} prompt tokens "
+              f"aliased ({rep['saved_frac']:.0%} of prefill), "
+              f"{rep['dedup_admits']} duplicate admits, "
+              f"{rep['cow_forks']} COW forks; "
+              f"TTFT p50={rep['ttft_p50_s']*1e3:.1f}ms "
+              f"p99={rep['ttft_p99_s']*1e3:.1f}ms")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i}: {o[:10]}...")
 

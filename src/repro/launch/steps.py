@@ -26,8 +26,9 @@ from repro.quantized.qmodel import pack_model
 
 __all__ = ["SHAPES", "shape_applicable", "make_train_step", "make_serve_step",
            "make_paged_serve_step", "make_paged_prefill_chunk_step",
-           "make_prefill_step", "input_specs", "param_structs", "opt_structs",
-           "qparam_structs", "cache_structs", "paged_pool_structs"]
+           "make_page_copy_step", "make_prefill_step", "input_specs",
+           "param_structs", "opt_structs", "qparam_structs", "cache_structs",
+           "paged_pool_structs"]
 
 
 SHAPES = {
@@ -127,6 +128,16 @@ def make_paged_prefill_chunk_step(cfg: ModelConfig):
     admits)."""
     from repro.serving.prefill import make_paged_prefill_step
     return make_paged_prefill_step(cfg)
+
+
+def make_page_copy_step(cfg: ModelConfig):
+    """(pools, src(), dst()) -> pools with page ``dst`` <- page ``src`` on
+    every leaf — the copy-on-write fork the batcher runs before a decode
+    write would mutate a page that still has other owners (prefix-cache /
+    duplicate-admit sharing). Page ids are traced scalars: ONE compiled
+    program covers every fork."""
+    from repro.serving.paged_cache import _copy_page
+    return _copy_page
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int):

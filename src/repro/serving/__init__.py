@@ -4,24 +4,35 @@
 - ``prefill``: chunked paged prefill (prompt K/V written straight into pages)
 - ``decode``: jit-able paged decode step (scatter-write + paged attention,
   per-request sampling params threaded as (B,) arrays)
-- ``batcher``: admit / evict / reclaim scheduler between decode steps
+- ``batcher``: admit / evict / reclaim loop between decode steps, with
+  refcounted page sharing (prefix-cache aliasing, duplicate-admit twins,
+  decode-time copy-on-write forks)
+- ``scheduler``: pluggable admission/eviction policy (FIFO legacy default;
+  SLO priority + fairness + per-tenant page quotas)
 
 The Pallas kernels behind the attention read live in
 ``repro.kernels.paged_decode`` (including the fused-GQA variant that reads
 each KV head's page once for all of its query heads); ``launch/serve.py``
 wraps this package as the serving driver.
 """
-from repro.serving.paged_cache import PageAllocator, PagedKVCache, NULL_PAGE
+from repro.serving.paged_cache import (PageAllocator, PagedKVCache,
+                                       PrefixCache, NULL_PAGE, chain_keys)
 from repro.serving.decode import (make_paged_decode_step,
                                   paged_attention_block, request_key,
                                   sample_logits, sample_logits_per_seq,
                                   sample_step_keys)
 from repro.serving.prefill import (make_paged_prefill_step,
-                                   paged_prefill_attention)
+                                   paged_prefill_attention,
+                                   run_prefill_chunks)
 from repro.serving.batcher import ContinuousBatcher, PagedRequest
+from repro.serving.scheduler import (FIFOScheduler, Scheduler, SLOScheduler,
+                                     make_scheduler)
+from repro.serving.trace import build_trace
 
-__all__ = ["PageAllocator", "PagedKVCache", "NULL_PAGE",
-           "make_paged_decode_step", "paged_attention_block",
+__all__ = ["PageAllocator", "PagedKVCache", "PrefixCache", "NULL_PAGE",
+           "chain_keys", "make_paged_decode_step", "paged_attention_block",
            "make_paged_prefill_step", "paged_prefill_attention",
-           "request_key", "sample_logits", "sample_logits_per_seq",
-           "sample_step_keys", "ContinuousBatcher", "PagedRequest"]
+           "run_prefill_chunks", "request_key", "sample_logits",
+           "sample_logits_per_seq", "sample_step_keys", "ContinuousBatcher",
+           "PagedRequest", "Scheduler", "FIFOScheduler", "SLOScheduler",
+           "make_scheduler", "build_trace"]

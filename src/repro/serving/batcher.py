@@ -17,9 +17,33 @@ with the production loop:
   reclaim   finished sequences return their pages to the free list and their
             slot to the admit pool immediately; nobody waits for a batch.
   evict     if a slot's next token needs a page and the pool is exhausted,
-            the most recently admitted sequence is preempted (vLLM-style
-            recompute preemption): its pages are freed and it re-queues with
-            prompt + generated-so-far, to be re-prefilled when space frees.
+            a live sequence is preempted (vLLM-style recompute preemption):
+            its page references are released and it re-queues with prompt +
+            generated-so-far, to be re-prefilled when space frees.
+
+Policy (WHICH request admits, WHO gets evicted, per-tenant quotas) lives in
+``serving/scheduler.py`` — the default ``FIFOScheduler`` reproduces the
+pre-refactor hardwired behaviour (queue head admits, newest admission
+evicts) decision-for-decision; ``SLOScheduler`` adds priority + fairness
+admission, page quotas and least-progress / shared-aware eviction.
+
+With ``prefix_cache`` enabled, pages are SHARED objects:
+
+  alias     admit looks the prompt's full-page runs up in the content-
+            addressed ``PrefixCache`` and aliases every matching page into
+            the block table (retained, zero prefill), chunk-prefilling only
+            the divergent tail. At least one tail token is always computed —
+            the last position's logits seed the first generated token.
+  publish   the tail's freshly computed full pages are indexed in the cache
+            (which holds its own reference), so they outlive this sequence.
+  dedup     a queued request with IDENTICAL content to a just-admitted one
+            joins the batch by retaining that slot's pages outright — zero
+            prefill, shared first-token logits (its own seed still draws its
+            own stream).
+  cow       before each decode step, a slot about to write into a page that
+            still has other owners forks it (``fork_page`` copy, release the
+            shared original) — no write ever mutates shared state, which is
+            what keeps outputs bit-identical to sharing disabled.
 
 Sampling is PER REQUEST: ``PagedRequest.temperature / top_k / seed`` ride
 into the jitted step as (B,) arrays plus per-slot key rows, so one compiled
@@ -36,7 +60,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List, Optional
+import time
+from typing import Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +70,9 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.serving.decode import (make_paged_decode_step, request_key,
                                  sample_logits_per_seq)
-from repro.serving.prefill import make_paged_prefill_step
-from repro.serving.paged_cache import PagedKVCache
+from repro.serving.prefill import make_paged_prefill_step, run_prefill_chunks
+from repro.serving.paged_cache import PagedKVCache, PrefixCache, chain_keys
+from repro.serving.scheduler import FIFOScheduler, Scheduler
 
 __all__ = ["PagedRequest", "ContinuousBatcher"]
 
@@ -57,7 +83,10 @@ class PagedRequest:
 
     ``temperature <= 0`` decodes greedily (the default — byte-identical to
     the pre-sampling batcher); ``temperature > 0`` samples, optionally
-    top-k-restricted, from the stream seeded by ``seed``.
+    top-k-restricted, from the stream seeded by ``seed``. ``tenant`` and
+    ``priority`` are policy inputs for ``SLOScheduler`` (quotas / admission
+    order); the default ``FIFOScheduler`` ignores both. ``arrival`` is
+    stamped by ``submit`` (fairness tiebreak within a priority class).
     """
 
     prompt: np.ndarray              # (S,) int32
@@ -66,6 +95,9 @@ class PagedRequest:
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    tenant: str = "default"
+    priority: int = 0
+    arrival: int = -1
 
 
 @dataclasses.dataclass
@@ -74,13 +106,18 @@ class _Slot:
     page_ids: List[int]
     seq_len: int                    # tokens whose K/V are in the pool
     last_tok: int                   # next decode step's input token
-    ticket: int = 0                 # admission order (eviction picks max)
+    ticket: int = 0                 # admission order (FIFO eviction picks max)
+    n_aliased: int = 0              # pages adopted from the cache / a twin
 
 
 class ContinuousBatcher:
     def __init__(self, params_q, cfg: ModelConfig, cache: PagedKVCache,
                  max_batch: int = 4, use_pallas: bool = True,
-                 prefill_chunk_pages: int = 4):
+                 prefill_chunk_pages: int = 4,
+                 scheduler: Optional[Scheduler] = None,
+                 prefix_cache: Union[bool, PrefixCache] = False,
+                 prefix_cache_entries: Optional[int] = None,
+                 gqa_pages_per_block: int = 1):
         self.params = params_q
         self.cfg = cfg
         self.cache = cache
@@ -88,13 +125,29 @@ class ContinuousBatcher:
         self.slots: List[Optional[_Slot]] = [None] * max_batch
         self.queue: Deque[PagedRequest] = collections.deque()
         self.done: List[PagedRequest] = []
-        self.step_fn = jax.jit(make_paged_decode_step(cfg, use_pallas=use_pallas))
+        self.step_fn = jax.jit(make_paged_decode_step(
+            cfg, use_pallas=use_pallas,
+            gqa_pages_per_block=gqa_pages_per_block))
         self.sampled_step_fn = jax.jit(make_paged_decode_step(
-            cfg, use_pallas=use_pallas, per_request=True))
+            cfg, use_pallas=use_pallas, per_request=True,
+            gqa_pages_per_block=gqa_pages_per_block))
         self.prefill_chunk_pages = max(int(prefill_chunk_pages), 1)
         self._prefill_chunk = jax.jit(make_paged_prefill_step(cfg))
+        self.scheduler = scheduler if scheduler is not None else FIFOScheduler()
+        if isinstance(prefix_cache, PrefixCache):
+            self.prefix: Optional[PrefixCache] = prefix_cache
+        else:
+            self.prefix = PrefixCache(cache.allocator,
+                                      max_entries=prefix_cache_entries) \
+                if prefix_cache else None
+        self._ticket = 0
+        self._arrival = 0
+        self._t_submit: Dict[int, float] = {}
+        self.ttft_s: List[float] = []   # submit -> first token, per request
         self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
-                      "evictions": 0, "peak_pages": 0}
+                      "evictions": 0, "peak_pages": 0, "prefill_tokens": 0,
+                      "prefill_tokens_saved": 0, "aliased_pages": 0,
+                      "dedup_admits": 0, "cow_forks": 0}
 
     # -- admission ---------------------------------------------------------
 
@@ -106,7 +159,23 @@ class ContinuousBatcher:
         if len(req.prompt) + req.max_new > \
                 self.cache.max_pages_per_seq * self.cache.page_size:
             raise ValueError("request exceeds max_pages_per_seq budget")
+        req.arrival = self._arrival
+        self._arrival += 1
+        self._t_submit[id(req)] = time.monotonic()
         self.queue.append(req)
+
+    def pages_needed(self, req: PagedRequest) -> int:
+        """Pages an admit of ``req`` holds before any prefix aliasing (the
+        scheduler's conservative quota estimate)."""
+        plen = len(req.prompt) + len(req.out)
+        extra = 1 if plen % self.cache.page_size == 0 else 0
+        return self.cache.pages_for(plen) + extra
+
+    def _record_first_token(self, req: PagedRequest) -> None:
+        if not req.out:           # re-admits already produced their first token
+            t0 = self._t_submit.pop(id(req), None)
+            if t0 is not None:
+                self.ttft_s.append(time.monotonic() - t0)
 
     def _first_token(self, req: PagedRequest, logits_row) -> int:
         """Select the token that follows the prefilled prompt.
@@ -128,51 +197,126 @@ class ContinuousBatcher:
             jnp.asarray([req.top_k], jnp.int32))
         return int(tok[0])
 
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Allocate with prefix-cache backpressure: when the pool is dry,
+        unreferenced cached runs are retired (LRU) before giving up."""
+        if n <= 0:
+            return []
+        got = self.cache.allocator.alloc(n)
+        if got is None and self.prefix is not None:
+            self.prefix.evict_lru(n - self.cache.allocator.num_free)
+            got = self.cache.allocator.alloc(n)
+        return got
+
     def _admit_one(self) -> bool:
-        """Chunk-prefill the queue head into a free slot. False if blocked."""
+        """Admit one scheduled request into a free slot. False if blocked.
+
+        With the prefix cache on, matching full-page prompt runs are ALIASED
+        (retained, zero prefill) and only the divergent tail — always at
+        least one token, whose logits seed the first generated token — is
+        chunk-prefilled; the tail's full pages are then published back to
+        the cache.
+        """
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return False
-        req = self.queue[0]
+        qi = self.scheduler.pick_admit(self)
+        if qi is None:
+            return False
+        req = self.queue[qi]
         if len(req.out) >= req.max_new:     # nothing left to generate
-            self.queue.popleft()
+            del self.queue[qi]
             self.done.append(req)
             return True
-        plen = len(req.prompt) + len(req.out)  # preempted: re-prefill both
-        n_pages = self.cache.pages_for(plen)
-        # when the prompt exactly fills its pages, the first decode write
-        # (position plen) needs one more page — grab it at admission so the
-        # slot never scatters into the null page
-        extra = 1 if plen % self.cache.page_size == 0 else 0
-        page_ids = self.cache.allocator.alloc(n_pages + extra)
-        if page_ids is None:
-            return False
-        self.queue.popleft()
         psz = self.cache.page_size
+        plen = len(req.prompt) + len(req.out)  # preempted: re-prefill both
         full = np.concatenate([req.prompt, np.asarray(req.out, np.int32)]) \
             if req.out else np.asarray(req.prompt, np.int32)
+        keys: List[bytes] = []
+        matched: List[int] = []
+        if self.prefix is not None:
+            keys = chain_keys(full, psz)
+            # cap at (plen-1)//psz so >= 1 tail token is always computed
+            matched = self.prefix.lookup(keys[: (plen - 1) // psz])
+        # pages_needed includes the extra page a page-aligned prompt's first
+        # decode write (position plen) needs — grabbed at admission so the
+        # slot never scatters into the null page
+        fresh = self._alloc_pages(self.pages_needed(req) - len(matched))
+        if fresh is None:
+            if matched:
+                self.cache.allocator.release(matched)
+            return False
+        del self.queue[qi]
+        page_ids = matched + fresh
         bt = jnp.asarray(self.cache.block_table_row(page_ids)[None])
-        chunk_tokens = self.prefill_chunk_pages * psz
-        off = 0
-        logits = None
-        while off < plen:
-            n_tok = min(chunk_tokens, plen - off)
-            c = self.cache.pages_for(n_tok) * psz   # pad tail to a page multiple
-            toks = np.zeros((1, c), np.int32)
-            toks[0, :n_tok] = full[off: off + n_tok]
-            logits, self.cache.pools = self._prefill_chunk(
-                self.params, jnp.asarray(toks), self.cache.pools, bt,
-                jnp.int32(off))
-            self.stats["prefill_chunks"] += 1
-            last_off, off = off, off + n_tok
-        nxt = self._first_token(req, logits[0, (plen - 1) - last_off])
+        start = len(matched) * psz
+        logits_row, self.cache.pools, n_chunks = run_prefill_chunks(
+            self._prefill_chunk, self.params, self.cache.pools, full, bt,
+            page_size=psz, chunk_pages=self.prefill_chunk_pages, start=start)
+        self.stats["prefill_chunks"] += n_chunks
+        self.stats["prefill_tokens"] += plen - start
+        self.stats["prefill_tokens_saved"] += start
+        self.stats["aliased_pages"] += len(matched)
+        if self.prefix is not None:
+            for i in range(len(matched), plen // psz):
+                self.prefix.insert(keys[i], page_ids[i])
+        nxt = self._first_token(req, logits_row)
         self.stats["prefills"] += 1
+        self._ticket += 1
         slot = _Slot(req=req, page_ids=page_ids, seq_len=plen, last_tok=nxt,
-                     ticket=self.stats["prefills"])
+                     ticket=self._ticket, n_aliased=len(matched))
+        self._record_first_token(req)
         req.out.append(nxt)
-        self.slots[free[0]] = slot
-        self._finish_if_done(free[0])
+        si = free[0]
+        self.slots[si] = slot
+        # duplicate-admit aliasing must run while this slot still holds its
+        # pages (a finished-at-admit release would strand the twins)
+        if self.prefix is not None:
+            self._admit_twins(full, plen, page_ids, logits_row)
+        self._finish_if_done(si)
         return True
+
+    def _admit_twins(self, full, plen, page_ids, logits_row) -> None:
+        """Admit queued requests whose CONTENT equals a just-admitted one by
+        retaining its pages outright — zero prefill, zero fresh pages.
+
+        The shared logits row is exactly what each twin's own prefill would
+        have produced (same compiled programs, same inputs), and every twin
+        samples its first token with its own (seed, index) key, so streams
+        never fork. Divergence after that is handled by the decode-time COW
+        fork: the first writer into the shared tail page copies it first.
+        """
+        qi = 0
+        while qi < len(self.queue):
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                return
+            q = self.queue[qi]
+            if len(q.out) >= q.max_new:     # drained by _admit_one's path
+                qi += 1
+                continue
+            q_full = np.concatenate([q.prompt, np.asarray(q.out, np.int32)]) \
+                if q.out else np.asarray(q.prompt, np.int32)
+            if len(q_full) != plen or not np.array_equal(q_full, full) or \
+                    not self.scheduler.admissible(self, q, len(page_ids)):
+                qi += 1
+                continue
+            self.cache.allocator.retain(page_ids)
+            del self.queue[qi]
+            nxt = self._first_token(q, logits_row)
+            self.stats["prefills"] += 1
+            self.stats["dedup_admits"] += 1
+            self.stats["prefill_tokens_saved"] += plen
+            self.stats["aliased_pages"] += len(page_ids)
+            self._ticket += 1
+            slot = _Slot(req=q, page_ids=list(page_ids), seq_len=plen,
+                         last_tok=nxt, ticket=self._ticket,
+                         n_aliased=len(page_ids))
+            self._record_first_token(q)
+            q.out.append(nxt)
+            si = free[0]
+            self.slots[si] = slot
+            self._finish_if_done(si)
 
     def _admit(self) -> None:
         while self._admit_one():
@@ -181,20 +325,25 @@ class ContinuousBatcher:
     # -- eviction / reclamation --------------------------------------------
 
     def _release(self, i: int) -> None:
+        """Drop slot i's page references; shared pages survive their co-owners
+        (the prefix cache or a duplicate-admit twin)."""
         slot = self.slots[i]
-        self.cache.allocator.free(slot.page_ids)
+        self.cache.allocator.release(slot.page_ids)
         self.slots[i] = None
 
-    def _evict_newest(self) -> bool:
-        """Preempt the youngest live sequence back to the queue head."""
-        live = [(i, s) for i, s in enumerate(self.slots) if s is not None]
-        if len(live) <= 1:
+    def _evict_one(self) -> bool:
+        """Preempt the scheduler's victim back to the queue head."""
+        vi = self.scheduler.pick_victim(self)
+        if vi is None:
             return False  # never evict the only runner: no forward progress
-        i, slot = max(live, key=lambda t: t[1].ticket)
         self.stats["evictions"] += 1
-        self.queue.appendleft(slot.req)
-        self._release(i)
+        self.queue.appendleft(self.slots[vi].req)
+        self._release(vi)
         return True
+
+    # legacy name (pre-scheduler tests drive the eviction path directly);
+    # under the default FIFOScheduler the victim IS the newest admission
+    _evict_newest = _evict_one
 
     def _ensure_page_capacity(self) -> None:
         """Every live slot must own the page its next token writes into."""
@@ -202,15 +351,47 @@ class ContinuousBatcher:
             if slot is None:
                 continue
             while len(slot.page_ids) * self.cache.page_size <= slot.seq_len:
-                got = self.cache.allocator.alloc(1)
+                got = self._alloc_pages(1)
                 if got is not None:
                     slot.page_ids.extend(got)
                     break
-                if not self._evict_newest():
+                if not self._evict_one():
                     raise RuntimeError(
                         "page pool exhausted with a single live sequence; "
                         "grow n_pages or shrink max_new")
-                if self.slots[i] is None:  # evicted ourselves (i was newest)
+                if self.slots[i] is None:  # the victim was slot i itself
+                    break
+
+    def _ensure_cow(self) -> None:
+        """Copy-on-write: no decode write may mutate a shared page.
+
+        Each live slot's next token writes at ``(seq_len // psz, seq_len %
+        psz)``; if that physical page still has other owners (a duplicate-
+        admit twin — cached full-prefix pages are never the write target,
+        they end strictly before position ``seq_len``), it is forked first:
+        copy the rows into a fresh page, swap the block-table entry, release
+        the shared original. Eviction of a co-owner can drop the count to 1
+        mid-loop, in which case no fork is needed after all.
+        """
+        psz = self.cache.page_size
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            idx = slot.seq_len // psz   # _ensure_page_capacity ran: in range
+            while self.cache.allocator.refcount(slot.page_ids[idx]) > 1:
+                got = self._alloc_pages(1)
+                if got is not None:
+                    old = slot.page_ids[idx]
+                    self.cache.fork_page(old, got[0])
+                    slot.page_ids[idx] = got[0]
+                    self.cache.allocator.release([old])
+                    self.stats["cow_forks"] += 1
+                    break
+                if not self._evict_one():
+                    raise RuntimeError(
+                        "page pool exhausted: cannot copy-on-write fork a "
+                        "shared page; grow n_pages")
+                if self.slots[i] is None:  # the victim was slot i itself
                     break
 
     def _finish_if_done(self, i: int) -> None:
@@ -258,6 +439,7 @@ class ContinuousBatcher:
         self._admit()
         self._ensure_page_capacity()
         self._admit()  # eviction may have freed a slot a queued req fits in
+        self._ensure_cow()  # after all admits: no write into a shared page
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return 0
@@ -299,5 +481,12 @@ class ContinuousBatcher:
         while self.queue or any(s is not None for s in self.slots):
             n = self.step()
             if n == 0 and self.queue:
-                raise RuntimeError("queue stalled: prompts cannot be admitted")
+                raise RuntimeError(
+                    "queue stalled: prompts cannot be admitted (pool too "
+                    "small, or every queued tenant is over quota)")
+        if self.prefix is not None:
+            # end-of-run drain: drop the cache's page references so the
+            # allocator returns to fully free between request batches (the
+            # cache amortises prefills WITHIN a run / server lifetime)
+            self.prefix.clear()
         return [r.out for r in requests]

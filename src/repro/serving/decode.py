@@ -119,11 +119,14 @@ def paged_block_body(pl, cfg: ModelConfig, carry, pool_slice, attn_sublayer):
 
 
 def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
-                          seq_lens, *, use_pallas: bool = True):
+                          seq_lens, *, use_pallas: bool = True,
+                          gqa_pages_per_block: int = 1):
     """Attention sublayer over the paged cache (one layer's pool slices).
 
     x: (B, 1, D) normed input; pools: {"k"/"v": (N, psz, Hkv, hd)[, scales]}.
-    Returns (attn_out (B, 1, D), updated pools).
+    Returns (attn_out (B, 1, D), updated pools). ``gqa_pages_per_block``
+    batches the fused-GQA kernel's inner softmax over page blocks (1 keeps
+    the single-page grid bit-for-bit).
     """
     positions = seq_lens[:, None]                       # (B, 1) write position
     q, k, v = L.attn_qkv(p, cfg, x, positions)
@@ -144,13 +147,15 @@ def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
         new["v"] = _write_token(pools["v"], phys, slot, v[:, 0])
     out = paged_decode(q[:, 0], new["k"], new["v"], block_tables, seq_lens + 1,
                        new.get("k_scale"), new.get("v_scale"),
-                       use_pallas=use_pallas)
+                       use_pallas=use_pallas,
+                       gqa_pages_per_block=gqa_pages_per_block)
     return L.attn_out(p, out[:, None].astype(q.dtype), cfg), new
 
 
 def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True,
                            temperature: float = 0.0, top_k: int = 0,
-                           per_request: bool = False):
+                           per_request: bool = False,
+                           gqa_pages_per_block: int = 1):
     """(params_q, tokens (B,1), pools, block_tables (B,P), seq_lens (B,))
     -> (next_token (B,1) int32, updated pools).
 
@@ -181,8 +186,10 @@ def make_paged_decode_step(cfg: ModelConfig, *, use_pallas: bool = True,
         h = embed_tokens(params_q, cfg, tokens, positions)
 
         def attn(p, x, pool_slice):
-            return paged_attention_block(p, cfg, x, pool_slice, block_tables,
-                                         seq_lens, use_pallas=use_pallas)
+            return paged_attention_block(
+                p, cfg, x, pool_slice, block_tables, seq_lens,
+                use_pallas=use_pallas,
+                gqa_pages_per_block=gqa_pages_per_block)
 
         def body(carry, xs):
             pl, pool_slice = xs

@@ -30,13 +30,15 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.models.model import embed_tokens, lm_head_logits
 from repro.serving.decode import paged_block_body
 
-__all__ = ["paged_prefill_attention", "make_paged_prefill_step"]
+__all__ = ["paged_prefill_attention", "make_paged_prefill_step",
+           "run_prefill_chunks"]
 
 NEG = -1e30
 
@@ -131,6 +133,39 @@ def paged_prefill_block(p, cfg: ModelConfig, x, pools, block_tables, offset):
         new["v"] = _write_chunk(pools["v"], ids, v)
     out = paged_prefill_attention(q, new, block_tables, offset)
     return L.attn_out(p, out.astype(q.dtype), cfg), new
+
+
+def run_prefill_chunks(chunk_fn, params_q, pools, full, block_table, *,
+                       page_size: int, chunk_pages: int, start: int = 0):
+    """Drive ``chunk_fn`` (a compiled ``make_paged_prefill_step``) over
+    ``full[start:]`` in page-aligned chunks.
+
+    ``start`` must be a ``page_size`` multiple strictly below ``len(full)`` —
+    the admit path's prefix-cache hook: positions below ``start`` were
+    aliased from already-populated pages and are skipped entirely (zero
+    prefill for the cached run), so only the divergent tail is computed.
+    Returns ``(last_logits_row, pools, n_chunks)`` where ``last_logits_row``
+    is the (V,) logits of the final prompt position (the first-token input).
+    """
+    plen = len(full)
+    if not 0 <= start < plen:
+        raise ValueError(f"start={start} outside prompt of {plen} tokens")
+    if start % page_size:
+        raise ValueError(f"start={start} not page aligned (psz={page_size})")
+    chunk_tokens = max(chunk_pages, 1) * page_size
+    off, last_off = start, start
+    logits = None
+    n_chunks = 0
+    while off < plen:
+        n_tok = min(chunk_tokens, plen - off)
+        c = -(-n_tok // page_size) * page_size  # pad tail to a page multiple
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :n_tok] = full[off: off + n_tok]
+        logits, pools = chunk_fn(params_q, jnp.asarray(toks), pools,
+                                 block_table, jnp.int32(off))
+        n_chunks += 1
+        last_off, off = off, off + n_tok
+    return logits[0, (plen - 1) - last_off], pools, n_chunks
 
 
 def make_paged_prefill_step(cfg: ModelConfig):

@@ -141,6 +141,61 @@ def test_manager_sharded_async_gc_and_restore(tmp_path):
     assert manifest["step"] == 3 and float(tree["w"][0]) == 3.0
 
 
+def _fake_second_host(step_dir, host_id):
+    """Clone host 0's shard files under another host id (a 2-host layout
+    fabricated on one machine — the gc test only needs the filenames)."""
+    import shutil
+    shutil.copy(step_dir / "host0000.npz", step_dir / f"host{host_id:04d}.npz")
+    shutil.copy(step_dir / "shards_host0000.json",
+                step_dir / f"shards_host{host_id:04d}.json")
+
+
+def test_manager_sharded_parallel_gc_two_hosts(tmp_path, monkeypatch):
+    """Sharded gc is per-host-parallel: each host unlinks only ITS OWN shard
+    files (host 1 leaves the manifest and host 0's shards alone), process 0
+    uncommits the manifest, and whoever finishes last wins the rmdir."""
+    for step in (1, 2, 3):
+        save_sharded_checkpoint(tmp_path, step, {"w": jnp.full((4,), 1.0)})
+        _fake_second_host(tmp_path / f"step_{step:08d}", 1)
+    mgr = CheckpointManager(tmp_path, keep=2, sharded=True)
+    old = tmp_path / "step_00000001"
+
+    monkeypatch.setattr(jax, "process_index", lambda: 1)
+    monkeypatch.setattr(jax, "process_count", lambda: 2)
+    mgr._gc()
+    # host 1 dropped its own shards; the step is still committed + readable
+    # for host 0's restore until process 0 removes the manifest
+    assert not (old / "host0001.npz").exists()
+    assert not (old / "shards_host0001.json").exists()
+    assert (old / "manifest.json").exists()
+    assert (old / "host0000.npz").exists()
+
+    monkeypatch.setattr(jax, "process_index", lambda: 0)
+    mgr._gc()
+    assert not old.exists()                     # last host wins the rmdir
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [2, 3]
+    restored, manifest = restore_sharded_checkpoint(tmp_path, None, None)
+    assert manifest["step"] == 3 and float(restored["w"][0]) == 1.0
+
+
+def test_manager_sharded_gc_sweeps_shrunk_hosts(tmp_path, monkeypatch):
+    """Process 0 sweeps shard files of host ids >= process_count: a save
+    from a larger mesh must not pin its step directory forever after the
+    job shrinks (nobody owns those files any more)."""
+    for step in (1, 2, 3):
+        save_sharded_checkpoint(tmp_path, step, {"w": jnp.full((4,), 1.0)})
+    _fake_second_host(tmp_path / "step_00000001", 1)
+    _fake_second_host(tmp_path / "step_00000001", 2)
+    monkeypatch.setattr(jax, "process_index", lambda: 0)
+    monkeypatch.setattr(jax, "process_count", lambda: 1)
+    mgr = CheckpointManager(tmp_path, keep=2, sharded=True)
+    mgr._gc()
+    assert not (tmp_path / "step_00000001").exists()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [2, 3]
+
+
 # ---------------- the ISSUE 5 bugfix: verify on the async manager path ----------------
 
 def test_manager_restore_verifies_checksum_and_names_file(tmp_path):

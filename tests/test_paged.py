@@ -212,6 +212,49 @@ def test_paged_decode_routes_gqa_to_fused():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("mp", [2, 4])
+def test_paged_decode_gqa_multipage_matches_oracle(mp):
+    """pages_per_block > 1 (the multi-page inner grid axis: MP pages staged
+    into VMEM scratch, one (rep, MP*psz) online-softmax update per block)
+    must match the oracle AND the single-page grid across ragged lengths —
+    including a max_pages that MP does not divide (the last block is
+    partially dead) and the normalize=False LSE partials."""
+    q, kp, vp, bt, lens, _, _ = _random_paged(
+        31, B=3, H=8, Hkv=2, Dh=16, page_size=8, n_pages=16, max_pages=5)
+    base = paged_decode_gqa_pallas(q, kp, vp, bt, lens, interpret=True)
+    out = paged_decode_gqa_pallas(q, kp, vp, bt, lens, interpret=True,
+                                  pages_per_block=mp)
+    want = paged_decode_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+    got = paged_decode_gqa_pallas(q, kp, vp, bt, lens, interpret=True,
+                                  pages_per_block=mp, normalize=False)
+    ref_ = paged_decode_ref(q, kp, vp, bt, lens, normalize=False)
+    for g, r in zip(got, ref_):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_gqa_multipage_int8_and_routing():
+    """int8 pages through the multi-page grid (per-page dequant happens at
+    stage time, before the block matmul), and the ops wrapper's
+    ``gqa_pages_per_block`` knob routes to it."""
+    q, k8, v8, bt, lens, ks, vs = _random_paged(
+        37, B=4, H=8, Hkv=2, Dh=32, page_size=4, n_pages=17, max_pages=4,
+        int8=True)
+    lens = jnp.asarray([1, 5, 9, 16], jnp.int32)  # 1 token .. full table
+    out = paged_decode_gqa_pallas(q, k8, v8, bt, lens, ks, vs,
+                                  interpret=True, pages_per_block=2)
+    want = paged_decode_ref(q, k8, v8, bt, lens, ks, vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    routed = paged_decode(q, k8, v8, bt, lens, ks, vs, gqa_pages_per_block=2)
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Chunked paged prefill (serving v2 admit path)
 # ---------------------------------------------------------------------------
