@@ -43,6 +43,12 @@ def main() -> None:
         fn()
         print(f"# {name} done in {time.time()-t1:.1f}s", file=sys.stderr)
     print(f"# all benchmarks in {time.time()-t0:.1f}s", file=sys.stderr)
+    # attach the final merged metrics snapshot next to the bench tables (the
+    # serving bench resets the registry mid-run; this captures what remains
+    # after the last job plus whatever earlier jobs already merged into it)
+    from repro import obs
+    p = obs.write_snapshot()
+    print(f"# metrics snapshot -> {p}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import ART, emit
+from repro import obs
 from repro.configs import get_config
 from repro.core.quant import QuantConfig
 from repro.launch.serve import PagedServer, Request
@@ -70,6 +71,12 @@ def run():
 
     off, outs_off, wall_off, leak_off = _serve(params_q, cfg, trace,
                                                prefix_cache=False)
+    off_rep = off.sharing_report()   # BEFORE the reset: both servers share
+    # the process registry, so the off run's TTFT histogram must be read (and
+    # then zeroed) before the on run observes into the same instruments —
+    # this is exactly the "registry reset between batcher runs" contract
+    # tests/test_obs.py pins
+    obs.get_registry().reset()
     on, outs_on, wall_on, leak_on = _serve(params_q, cfg, trace,
                                            prefix_cache=True)
 
@@ -85,6 +92,28 @@ def run():
     assert rep["saved_frac"] >= 0.5, \
         f"prefill_tokens_saved {rep['prefill_tokens_saved']}/{total} < 50%"
 
+    # obs/stats reconciliation: after the reset the registry holds ONLY the
+    # sharing-on run, so every counter must equal the batcher's legacy stats
+    # dict exactly, and the TTFT histogram must hold one sample per request
+    st = on.batcher.stats
+    for cname, skey in (("serving_prefill_tokens_total", "prefill_tokens"),
+                        ("serving_prefill_tokens_saved_total",
+                         "prefill_tokens_saved"),
+                        ("serving_aliased_pages_total", "aliased_pages"),
+                        ("serving_dedup_admits_total", "dedup_admits"),
+                        ("serving_cow_forks_total", "cow_forks"),
+                        ("serving_decode_steps_total", "steps")):
+        got = obs.counter(cname).total()
+        assert got == st[skey], \
+            f"obs/stats divergence: {cname}={got} vs stats[{skey!r}]={st[skey]}"
+    assert obs.counter("serving_preemptions_total").total() == \
+        st["evictions"], "preemption counter drifted from stats['evictions']"
+    n_ttft = on.batcher.obs["ttft"].count()
+    assert n_ttft == len(trace), \
+        f"TTFT histogram holds {n_ttft} samples for {len(trace)} requests"
+    assert rep["prefill_tokens_saved"] == \
+        obs.counter("serving_prefill_tokens_saved_total").total()
+
     record(f"serving/prefix_cache/{tag}/off", wall_off * 1e6,
            f"prefill_tokens={off.batcher.stats['prefill_tokens']};"
            f"leaked_pages={leak_off}")
@@ -95,13 +124,13 @@ def run():
            f"dedup_admits={rep['dedup_admits']};"
            f"cow_forks={rep['cow_forks']};"
            f"leaked_pages={leak_on};outputs=token_identical")
-    off_rep = off.sharing_report()
     for p in ("p50", "p99"):
         record(f"serving/ttft/{p}", rep[f"ttft_{p}_s"] * 1e6,
                f"sharing_off_{p}_us={off_rep[f'ttft_{p}_s']*1e6:.0f}")
 
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "BENCH_serving.json").write_text(json.dumps(rows, indent=1))
+    obs.write_snapshot()   # sharing-on run -> artifacts/obs/metrics.json
     return rows
 
 

@@ -51,6 +51,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.quant import QTensor
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
@@ -159,7 +160,11 @@ def _checksum(arr: np.ndarray) -> str:
 def _publish_npz(directory: pathlib.Path, name: str, flat: dict):
     tmp = directory / f".tmp_{name}"                  # np.savez appends .npz
     np.savez(tmp, **flat)                             # unless it's present
-    (directory / f".tmp_{name}.npz").rename(directory / f"{name}.npz")
+    tmp_npz = directory / f".tmp_{name}.npz"
+    obs.counter("ckpt_bytes_written_total",
+                "Checkpoint shard/file bytes published to disk").inc(
+        tmp_npz.stat().st_size)
+    tmp_npz.rename(directory / f"{name}.npz")
 
 
 def _publish_json(path: pathlib.Path, obj):
@@ -558,7 +563,12 @@ class CheckpointManager:
 
         def _work():
             try:
-                _write()
+                with obs.trace_span("ckpt.save", step=step,
+                                    sharded=self.sharded,
+                                    hist=obs.histogram(
+                                        "ckpt_save_seconds",
+                                        "Checkpoint write latency")):
+                    _write()
                 self._gc()
             except BaseException as e:  # noqa: BLE001 — re-raised by wait()
                 self._error = e
@@ -582,14 +592,19 @@ class CheckpointManager:
         """Checksum-verifying restore (the async path verifies exactly like
         the direct functions — corruption raises IOError naming the file)."""
         self.wait()  # an in-flight async save must land before we read
-        if self.sharded or shardings is not None:
-            return restore_sharded_checkpoint(self.dir, step, shardings,
-                                              verify=verify)
-        return restore_checkpoint(self.dir, step, verify=verify)
+        with obs.trace_span("ckpt.restore", hist=obs.histogram(
+                "ckpt_restore_seconds", "Checkpoint restore latency")):
+            if self.sharded or shardings is not None:
+                return restore_sharded_checkpoint(self.dir, step, shardings,
+                                                  verify=verify)
+            return restore_checkpoint(self.dir, step, verify=verify)
 
     def _gc(self):
         steps = sorted(p for p in self.dir.glob("step_*"))
         drop = steps[:-self.keep]
+        if drop:
+            obs.counter("ckpt_gc_sweeps_total",
+                        "Retention sweeps that removed old steps").inc()
         if not self.sharded:
             for p in drop:
                 for f in p.iterdir():

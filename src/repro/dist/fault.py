@@ -15,6 +15,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.ckpt.checkpoint import list_steps
 
 __all__ = ["StepWatchdog", "PreemptionGuard", "run_resilient",
@@ -24,7 +25,12 @@ __all__ = ["StepWatchdog", "PreemptionGuard", "run_resilient",
 class StepWatchdog:
     """Flags straggler steps: a step slower than ``threshold`` x the median of
     recent healthy steps. Flagged samples are excluded from the baseline so a
-    slow patch cannot drag the median up and mask itself."""
+    slow patch cannot drag the median up and mask itself.
+
+    Every observation lands in the ``dist_step_seconds`` histogram; trips
+    count into ``dist_watchdog_trips_total`` and the rolling median (plus the
+    sample count, so "no baseline yet" is distinguishable from "fast") is
+    exported as gauges."""
 
     def __init__(self, threshold: float = 2.0, warmup: int = 5,
                  window: int = 64):
@@ -33,24 +39,56 @@ class StepWatchdog:
         self.window = window
         self.flagged = 0
         self._times: list = []
+        reg = obs.get_registry()
+        self._h_step = reg.histogram(
+            "dist_step_seconds", "Observed step durations (all samples)")
+        self._c_trips = reg.counter(
+            "dist_watchdog_trips_total", "Steps flagged as stragglers")
+        self._g_median = reg.gauge(
+            "dist_watchdog_median_step_seconds",
+            "Rolling median of healthy step durations")
+        self._g_samples = reg.gauge(
+            "dist_watchdog_samples_seen",
+            "Healthy samples in the watchdog baseline")
 
     def observe(self, step_seconds: float) -> bool:
         """Record one step duration; returns True iff it is a straggler."""
+        self._h_step.observe(step_seconds)
         is_straggler = False
         if len(self._times) >= self.warmup:
             baseline = float(np.median(self._times[-self.window:]))
             is_straggler = step_seconds > self.threshold * baseline
         if is_straggler:
             self.flagged += 1
+            self._c_trips.inc()
         else:
             self._times.append(step_seconds)
+        med = self.median_step
+        if med is not None:
+            self._g_median.set(med)
+        self._g_samples.set(self.samples_seen)
         return is_straggler
+
+    @property
+    def samples_seen(self) -> int:
+        """Healthy samples recorded so far — report this next to
+        ``median_step`` so a pre-warmup ``None`` median reads as "too few
+        samples", not silently as "no stragglers"."""
+        return len(self._times)
 
     @property
     def median_step(self) -> Optional[float]:
         if not self._times:
             return None
         return float(np.median(self._times[-self.window:]))
+
+    def stats(self) -> dict:
+        """One-line health summary: median (None pre-warmup), the sample
+        count that explains it, and trips."""
+        return {"median_step": self.median_step,
+                "samples_seen": self.samples_seen,
+                "warmed_up": self.samples_seen >= self.warmup,
+                "flagged": self.flagged}
 
 
 class PreemptionGuard:
@@ -95,10 +133,13 @@ class PreemptionGuard:
         """Checkpoint ``state`` at ``step``, join the save, then barrier so
         every host has the step durably written before anyone exits."""
         from repro.dist import runtime
-        if ckpt is not None:
-            ckpt.save(step, state)
-            ckpt.wait()
-        runtime.barrier("preemption-drain")
+        obs.counter("dist_preemption_drains_total",
+                    "Preemption signals drained to a checkpoint").inc()
+        with obs.trace_span("dist.preemption_drain", step=step):
+            if ckpt is not None:
+                ckpt.save(step, state)
+                ckpt.wait()
+            runtime.barrier("preemption-drain")
 
 
 def run_resilient(step_fn: Callable, state, n_steps: int, *, ckpt=None,

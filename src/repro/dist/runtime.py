@@ -205,7 +205,11 @@ def barrier(tag: str = "") -> None:
     later. Single-process runs execute the same psum on the local mesh (cheap,
     and it keeps the code path identical instead of special-cased).
     """
-    total = _barrier_fn()()
+    from repro import obs
+    with obs.trace_span("dist.barrier", tag=tag,
+                        hist=obs.histogram("dist_barrier_seconds",
+                                           "Barrier wait latency")):
+        total = _barrier_fn()()
     n = jax.device_count()
     if total != n:
         raise RuntimeError(

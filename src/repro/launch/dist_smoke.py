@@ -16,7 +16,11 @@ Each process asserts, and exits non-zero on any failure:
      global mesh must reproduce the sequential engine's trajectory
      BIT-FOR-BIT (histories compared exactly — the sequential run is pure
      process-local compute, so it doubles as the single-process reference);
-  3. sharded checkpoint: a tree (dense + QTensor leaves) sharded over a
+  3. obs aggregation: each process fills a registry with pid-skewed values;
+     ``obs.dist_snapshot()`` must merge them (counters summed, gauges
+     min/max/sum, histogram buckets added) into byte-identical snapshots on
+     every host, with process 0 writing the merged report;
+  4. sharded checkpoint: a tree (dense + QTensor leaves) sharded over a
      ("data", "model") mesh is saved with each process writing ONLY its
      addressable shards, then restored onto a DIFFERENT mesh shape (1-D
      ("data",)) and onto plain host-local arrays; both must match the
@@ -75,6 +79,63 @@ def _check_mapped_parity(steps: int, migrate_every: int, population: int):
     print(f"[dist_smoke] mapped parity OK: {n_islands} islands x "
           f"{steps} steps, {r_map.stats['migrations']} migrations, "
           f"loss {r_map.initial_loss:.4f}->{r_map.final_loss:.4f}",
+          flush=True)
+
+
+def _check_obs_aggregation(metrics_out: str = None):
+    """Multi-host metric aggregation: every process contributes a pid-skewed
+    registry; ``dist_snapshot()`` must produce the SAME merged snapshot on
+    every host, with counters summed, gauges min/max/sum-merged and
+    histogram buckets added exactly. Process 0 commits the report."""
+    import json
+
+    import jax
+
+    from repro import obs
+
+    pid, nproc = jax.process_index(), jax.process_count()
+    reg = obs.Registry()
+    # pid-dependent values so a "merge" that is secretly a local snapshot
+    # (or that double-counts a host) cannot pass the sum checks
+    reg.counter("smoke_widgets_total", "per-host counter").inc(10 + pid)
+    reg.counter("smoke_labelled_total", "labelled counter").inc(
+        2, host=f"h{pid}")
+    reg.gauge("smoke_depth", "per-host gauge").set(float(pid))
+    h = reg.histogram("smoke_lat_seconds", "per-host histogram",
+                      buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5 + pid)     # pid 0 lands in bucket 1, pid>=1 in +Inf
+
+    snap = obs.dist_snapshot(reg, force_gather=(nproc == 1))
+    blob = obs.snapshot_json(snap)
+
+    want_widgets = sum(10 + p for p in range(nproc))
+    got_widgets = snap["smoke_widgets_total"]["series"][0]["value"]
+    assert got_widgets == want_widgets, \
+        f"counter merge: {got_widgets} != {want_widgets}"
+    assert len(snap["smoke_labelled_total"]["series"]) == nproc, \
+        "labelled series lost in the merge"
+    g = snap["smoke_depth"]["series"][0]
+    assert (g["min"], g["max"], g["n"]) == (0.0, float(nproc - 1), nproc), \
+        f"gauge merge: {g}"
+    hs = snap["smoke_lat_seconds"]["series"][0]
+    assert hs["count"] == 2 * nproc and hs["counts"][0] == nproc, \
+        f"histogram merge: {hs}"
+
+    # cross-host identity: all-gather each host's JSON of the MERGED snapshot
+    # and require byte equality (single-process: trivially one payload)
+    from repro.obs.aggregate import _exchange_payload
+    peers = set(_exchange_payload(blob.encode()))
+    assert len(peers) == 1, "merged snapshots differ across hosts"
+
+    if metrics_out:
+        p = obs.write_snapshot(snap, path=metrics_out)
+        if p is not None:   # process 0 only
+            back = json.loads(p.read_text())
+            assert back["smoke_widgets_total"]["series"][0]["value"] == \
+                want_widgets
+    print(f"[dist_smoke] obs aggregation OK: {nproc} process(es), "
+          f"widgets={int(got_widgets)}, identical snapshots on all hosts",
           flush=True)
 
 
@@ -160,6 +221,9 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-dir", default=None,
                     help="SHARED directory for the sharded-checkpoint phase "
                          "(all processes must see the same files)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="merged metrics snapshot path for the obs phase "
+                         "(process 0 writes; default: no file)")
     args = ap.parse_args(argv)
 
     # must precede any jax computation (CPU collectives backend selection)
@@ -177,6 +241,8 @@ def main(argv=None) -> int:
           flush=True)
 
     _check_mapped_parity(args.steps, args.migrate_every, args.population)
+
+    _check_obs_aggregation(args.metrics_out)
 
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="dist_smoke_ckpt_")
     _check_sharded_ckpt(ckpt_dir)

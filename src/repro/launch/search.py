@@ -26,6 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config
 from repro.core.pipeline import quantize_model
 from repro.core.quant import QuantConfig
@@ -61,7 +62,8 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
                      mapped: bool = False,
                      bits: int = 2, group: int = 32, n_seqs: int = 4,
                      seq_len: int = 128, seed: int = 0,
-                     out: pathlib.Path = None) -> dict:
+                     out: pathlib.Path = None,
+                     metrics_out: str = obs.DEFAULT_METRICS_PATH) -> dict:
     cfg = get_config(arch).reduced()
     params = init_params(jax.random.PRNGKey(seed), cfg)
 
@@ -80,12 +82,21 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
                         mapped=mapped)
     qcfg = QuantConfig(bits=bits, group_size=group)
 
+    prop_before = obs.counter(
+        "search_proposals_total", "Candidate transforms proposed").total()
     t0 = time.time()
     result = quantize_model(params, cfg, qcfg, method="rtn",
                             calib_tokens=calib, search=scfg)
     dt = time.time() - t0
     sr = result.search
     proposals = sr.stats["proposals"] if sr.stats else steps
+    # the registry must reconcile exactly with the legacy stats dict — a
+    # drift here means an instrumentation hook was moved off the hot path
+    prop_delta = obs.counter("search_proposals_total", "").total() - prop_before
+    if sr.stats and not mapped and prop_delta != proposals:
+        raise AssertionError(
+            f"obs/stats divergence: search_proposals_total grew by "
+            f"{prop_delta} but stats['proposals'] == {proposals}")
     family = "search_mapped_islands" if mapped else "search/engine"
     row = {
         "name": (f"{family}/{arch}s{steps}p{population}i{islands}"
@@ -100,6 +111,8 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
     out = pathlib.Path(out) if out else ART / "BENCH_search.json"
     out.parent.mkdir(parents=True, exist_ok=True)
     _merge_rows(out, row)
+    if metrics_out:
+        obs.write_snapshot(path=metrics_out)
     return row
 
 
@@ -123,13 +136,20 @@ def main(argv=None) -> int:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--metrics-out", default=obs.DEFAULT_METRICS_PATH,
+                    help="merged metrics snapshot path ('' disables)")
+    ap.add_argument("--trace-out", default="",
+                    help="span/event JSONL sink path ('' disables)")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        obs.set_trace_sink(args.trace_out)
     run_search_bench(args.arch, steps=args.steps, population=args.population,
                      islands=args.islands, temperature=args.temperature,
                      anneal=args.anneal, migrate_every=args.migrate_every,
                      fused=args.fused, mapped=args.mapped, bits=args.bits,
                      group=args.group, n_seqs=args.seqs,
-                     seq_len=args.seq_len, seed=args.seed, out=args.out)
+                     seq_len=args.seq_len, seed=args.seed, out=args.out,
+                     metrics_out=args.metrics_out)
     return 0
 
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core.quant import QuantConfig
 from repro.launch.steps import make_serve_step
@@ -141,15 +142,17 @@ class PagedServer:
         return self.batcher.run(paged)
 
     def sharing_report(self) -> dict:
-        """Prefix-sharing + latency stats for the run(s) so far."""
+        """Prefix-sharing + latency stats for the run(s) so far.
+
+        TTFT percentiles come from the ``serving_ttft_seconds`` histogram
+        (accurate to within one bucket width; exact under multi-host merge),
+        not a per-request list."""
         st = self.batcher.stats
         total = st["prefill_tokens"] + st["prefill_tokens_saved"]
-        ttft = sorted(self.batcher.ttft_s)
+        ttft = self.batcher.obs["ttft"]
 
         def pct(p):
-            if not ttft:
-                return 0.0
-            return ttft[min(int(p * (len(ttft) - 1)), len(ttft) - 1)]
+            return ttft.quantile(p) if ttft.count() else 0.0
 
         return {
             "prefill_tokens": st["prefill_tokens"],
@@ -194,7 +197,13 @@ def main():
                          "sharing one system-prompt prefix")
     ap.add_argument("--legacy", action="store_true",
                     help="fixed-slot BatchedServer instead of the paged path")
+    ap.add_argument("--metrics-out", default=obs.DEFAULT_METRICS_PATH,
+                    help="merged metrics snapshot path ('' disables)")
+    ap.add_argument("--trace-out", default="",
+                    help="span/event JSONL sink path ('' disables)")
     args = ap.parse_args()
+    if args.trace_out:
+        obs.set_trace_sink(args.trace_out)
 
     cfg = get_config(args.arch).reduced()
     key = jax.random.PRNGKey(0)
@@ -258,6 +267,9 @@ def main():
               f"p99={rep['ttft_p99_s']*1e3:.1f}ms")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i}: {o[:10]}...")
+    if args.metrics_out:
+        p = obs.write_snapshot(path=args.metrics_out)
+        print(f"[serve] metrics snapshot -> {p}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Zero-dependency observability: metrics registry, span tracing, and
+multi-host aggregation. See ``registry``/``tracing``/``aggregate`` for the
+pieces; the public surface is re-exported here so call sites write
+``from repro import obs`` and stay short."""
+from repro.obs.registry import (  # noqa: F401
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    counter,
+    gauge,
+    get_registry,
+    hist_quantile,
+    histogram,
+    merge_snapshots,
+    snapshot_json,
+)
+from repro.obs.tracing import (  # noqa: F401
+    emit,
+    enable_xprof,
+    get_trace_sink,
+    set_trace_sink,
+    trace_span,
+    trace_to,
+)
+from repro.obs.aggregate import (  # noqa: F401
+    DEFAULT_METRICS_PATH,
+    dist_snapshot,
+    write_snapshot,
+)
+
+__all__ = [
+    "LATENCY_BUCKETS_S", "Counter", "Gauge", "Histogram", "Registry",
+    "counter", "gauge", "get_registry", "hist_quantile", "histogram",
+    "merge_snapshots", "snapshot_json",
+    "emit", "enable_xprof", "get_trace_sink", "set_trace_sink",
+    "trace_span", "trace_to",
+    "DEFAULT_METRICS_PATH", "dist_snapshot", "write_snapshot",
+]

@@ -1,0 +1,179 @@
+"""Span tracing: wall-time + monotonic-duration events to a JSONL sink.
+
+``trace_span(name, **attrs)`` is a context manager that emits a begin event
+(``{"ph": "B", "name", "ts", ...attrs}``) and an end event
+(``{"ph": "E", "name", "ts", "dur_s"}``) to the configured sink, measuring
+the duration on the MONOTONIC clock (``ts`` stays wall time so hosts can be
+lined up). With no sink configured a span still times itself — callers use
+``span.dur`` / ``span.elapsed()`` for metrics — at the cost of two
+``perf_counter``-class calls, so instrumenting a hot loop is safe.
+
+Optional integrations:
+
+  hist=       an ``obs.Histogram``; the span observes its duration on exit,
+              so "span timing" and "latency histogram" are one call site.
+  xprof=True  wraps the body in ``jax.profiler.TraceAnnotation`` (or
+              ``StepTraceAnnotation`` when a ``step=`` attr is present), so
+              the same spans line up against XLA device activity in a
+              ``jax.profiler.trace`` capture. Off by default
+              (``enable_xprof()`` flips the process default).
+
+``emit(name, **fields)`` writes a structured instant event (``"ph": "i"``)
+and prints a compact ``[name] k=v ...`` line — the replacement for ad-hoc
+progress ``print``s in the search engine.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import IO, Optional, Union
+
+__all__ = ["trace_span", "emit", "set_trace_sink", "get_trace_sink",
+           "trace_to", "enable_xprof"]
+
+_lock = threading.Lock()
+_sink: Optional[IO] = None
+_sink_owned = False        # opened by us (close on replace) vs caller-owned
+_xprof_default = False
+
+
+def enable_xprof(on: bool = True) -> None:
+    """Process default for the ``jax.profiler`` annotation passthrough."""
+    global _xprof_default
+    _xprof_default = bool(on)
+
+
+def _open(sink: Union[str, IO, None]):
+    """Resolve a sink spec to (file_or_None, owned_by_us)."""
+    if isinstance(sink, str):
+        import pathlib
+        p = pathlib.Path(sink)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        return p.open("a"), True
+    return sink, False
+
+
+def set_trace_sink(sink: Union[str, IO, None]) -> None:
+    """Point span/event output at a JSONL file. A string opens (appends) the
+    path; a file-like object is used as-is; ``None`` disables tracing."""
+    global _sink, _sink_owned
+    new, owned = _open(sink)
+    with _lock:
+        if _sink is not None and _sink_owned:
+            try:
+                _sink.close()
+            except OSError:
+                pass
+        _sink, _sink_owned = new, owned
+
+
+def get_trace_sink() -> Optional[IO]:
+    return _sink
+
+
+class trace_to:
+    """Scoped sink: ``with trace_to(path): ...`` restores the previous sink
+    on exit (tests, nested drivers). The previous sink is left open."""
+
+    def __init__(self, sink: Union[str, IO, None]):
+        self._spec = sink
+
+    def __enter__(self):
+        global _sink, _sink_owned
+        new, owned = _open(self._spec)
+        with _lock:
+            self._prev, self._prev_owned = _sink, _sink_owned
+            _sink, _sink_owned = new, owned
+        return self
+
+    def __exit__(self, *exc):
+        global _sink, _sink_owned
+        with _lock:
+            if _sink is not None and _sink_owned:
+                try:
+                    _sink.close()
+                except OSError:
+                    pass
+            _sink, _sink_owned = self._prev, self._prev_owned
+        return False
+
+
+def _write(event: dict) -> None:
+    sink = _sink
+    if sink is None:
+        return
+    line = json.dumps(event) + "\n"
+    with _lock:
+        sink.write(line)
+        sink.flush()
+
+
+class trace_span:
+    """Context manager; after exit ``.dur`` holds the monotonic duration in
+    seconds. ``elapsed()`` reads the running duration while still open."""
+
+    __slots__ = ("name", "attrs", "hist", "hist_labels", "xprof", "t_wall",
+                 "_t0", "dur", "_annotation")
+
+    def __init__(self, name: str, hist=None, hist_labels: Optional[dict] = None,
+                 xprof: Optional[bool] = None, **attrs):
+        self.name = name
+        self.attrs = attrs
+        self.hist = hist
+        self.hist_labels = hist_labels or {}
+        self.xprof = _xprof_default if xprof is None else xprof
+        self.dur: Optional[float] = None
+        self._annotation = None
+
+    def elapsed(self) -> float:
+        return time.monotonic() - self._t0
+
+    def __enter__(self):
+        if self.xprof:
+            self._annotation = _make_annotation(self.name, self.attrs)
+            if self._annotation is not None:
+                self._annotation.__enter__()
+        self.t_wall = time.time()
+        self._t0 = time.monotonic()
+        if _sink is not None:
+            _write({"ph": "B", "name": self.name, "ts": self.t_wall,
+                    **({"attrs": self.attrs} if self.attrs else {})})
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.dur = time.monotonic() - self._t0
+        if self._annotation is not None:
+            self._annotation.__exit__(exc_type, exc, tb)
+            self._annotation = None
+        if self.hist is not None:
+            self.hist.observe(self.dur, **self.hist_labels)
+        if _sink is not None:
+            _write({"ph": "E", "name": self.name, "ts": time.time(),
+                    "dur_s": self.dur,
+                    **({"error": repr(exc)} if exc is not None else {})})
+        return False
+
+
+def _make_annotation(name: str, attrs: dict):
+    """``StepTraceAnnotation`` when a step attribute rides along (XLA step
+    markers), plain ``TraceAnnotation`` otherwise; None when the profiler
+    API is unavailable (ancient jax)."""
+    try:
+        from jax import profiler
+        if "step" in attrs:
+            return profiler.StepTraceAnnotation(name,
+                                                step_num=int(attrs["step"]))
+        return profiler.TraceAnnotation(name)
+    except Exception:  # noqa: BLE001 — tracing must never take the run down
+        return None
+
+
+def emit(name: str, _print: bool = True, **fields) -> str:
+    """Structured instant event + compact human line. Returns the line."""
+    if _sink is not None:
+        _write({"ph": "i", "name": name, "ts": time.time(), **fields})
+    line = f"[{name}] " + " ".join(f"{k}={v}" for k, v in fields.items())
+    if _print:
+        print(line, flush=True)
+    return line

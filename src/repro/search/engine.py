@@ -35,7 +35,6 @@ Execution modes:
 """
 from __future__ import annotations
 
-import time
 import warnings
 from typing import Optional
 
@@ -43,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import invariance as inv
 from repro.core import objective as obj
 from repro.models.model import forward
@@ -52,6 +52,32 @@ from repro.search.islands import (IslandState, make_island_streams, migrate,
 from repro.search.population import candidate_keys, stack_trees, take_tree
 
 __all__ = ["run_population_search"]
+
+
+def _search_metrics():
+    """Instrument handles on the process registry (get-or-create, so a
+    registry ``reset()`` between runs keeps these valid)."""
+    reg = obs.get_registry()
+    return {
+        "proposals": reg.counter(
+            "search_proposals_total", "Candidate transforms proposed"),
+        "accepts": reg.counter(
+            "search_accepts_total", "Moves accepted by the Metropolis rule"),
+        "uphill": reg.counter(
+            "search_uphill_accepts_total",
+            "Accepted strictly-worse (uphill) moves"),
+        "migrations": reg.counter(
+            "search_migrations_total", "Elite island migrations applied"),
+        "best": reg.gauge(
+            "search_objective_best", "Best combined objective seen so far"),
+        "temp": reg.gauge(
+            "search_temperature", "Annealing temperature at the last step"),
+        "step": reg.histogram(
+            "search_step_seconds", "Wall time of one full search step"),
+        "eval": reg.histogram(
+            "search_eval_seconds",
+            "Proposal evaluation latency (dispatch + loss sync)"),
+    }
 
 
 def _tree_slice(tree, i):
@@ -176,11 +202,14 @@ def run_population_search(
     stats = {"migrations": 0, "uphill_accepts": 0,
              "proposals": scfg.steps * K * n_islands, "fused": fused,
              "mapped": mapped}
+    metrics = _search_metrics()
+    metrics["best"].set(loss0)
 
     if mapped:
         return _run_mapped_islands(
             SearchResult, adapter, scfg, env, step_body, schedule, stats,
-            transforms0, fq0, loss0, ce0, mse0, n_islands, migrate_every)
+            transforms0, fq0, loss0, ce0, mse0, n_islands, migrate_every,
+            metrics)
 
     step_fn = jax.jit(
         lambda key, transforms, fq_stack, u:
@@ -194,44 +223,60 @@ def run_population_search(
             current_loss=loss0, best_loss=loss0, best_transforms=transforms0,
             best_fq=fq0, history=[(0, loss0, ce0, float(mse0), True)]))
 
-    t_start = time.time()
-    for step in range(1, scfg.steps + 1):
-        T = schedule(step)
-        for isl in islands:
-            isl.key, sub = jax.random.split(isl.key)
-            u = jnp.int32(isl.rng.integers(adapter.n_units))
-            loss, ce, mse, fq_new, t_new = step_fn(
-                sub, isl.transforms, isl.fq_stack, u)
-            loss = float(loss)
-            delta = loss - isl.current_loss
-            uniform = isl.rng.random() if T > 0.0 else None
-            accepted = anneal.accept(delta, T, uniform)
-            if accepted:
-                # strictly-worse moves only (delta == 0 is lateral, not
-                # uphill), counted as a Python int — not an accumulated
-                # numpy bool
-                if delta > 0.0:
-                    stats["uphill_accepts"] += 1
-                isl.current_loss = loss
-                isl.fq_stack = fq_new
-                isl.transforms = _tree_update(isl.transforms, u, t_new)
-                isl.n_accept += 1
-                if loss < isl.best_loss:
-                    isl.best_loss = loss
-                    isl.best_transforms = isl.transforms
-                    isl.best_fq = isl.fq_stack
-            isl.history.append((step, loss, float(ce), float(mse), accepted))
-        if migrate_every and n_islands > 1 and step % migrate_every == 0:
-            stats["migrations"] += migrate(islands)
-        if scfg.log_every and step % scfg.log_every == 0:
-            best = min(s.best_loss for s in islands)
-            rate = sum(s.n_accept for s in islands) / (step * n_islands)
-            print(f"[search] step={step} best={best:.5f} accept={rate:.2%} "
-                  f"T={T:.4g} ({(time.time() - t_start):.1f}s)")
+    with obs.trace_span("search.run", mode="sequential",
+                        islands=n_islands, population=K) as run_span:
+        for step in range(1, scfg.steps + 1):
+            T = schedule(step)
+            with obs.trace_span("search.step", step=step,
+                                hist=metrics["step"]):
+                for isl in islands:
+                    isl.key, sub = jax.random.split(isl.key)
+                    u = jnp.int32(isl.rng.integers(adapter.n_units))
+                    with obs.trace_span("search.eval",
+                                        hist=metrics["eval"]):
+                        loss, ce, mse, fq_new, t_new = step_fn(
+                            sub, isl.transforms, isl.fq_stack, u)
+                        loss = float(loss)   # the device sync
+                    metrics["proposals"].inc(K)
+                    delta = loss - isl.current_loss
+                    uniform = isl.rng.random() if T > 0.0 else None
+                    accepted = anneal.accept(delta, T, uniform)
+                    if accepted:
+                        # strictly-worse moves only (delta == 0 is lateral,
+                        # not uphill), counted as a Python int — not an
+                        # accumulated numpy bool
+                        if delta > 0.0:
+                            stats["uphill_accepts"] += 1
+                            metrics["uphill"].inc()
+                        metrics["accepts"].inc()
+                        isl.current_loss = loss
+                        isl.fq_stack = fq_new
+                        isl.transforms = _tree_update(isl.transforms, u,
+                                                      t_new)
+                        isl.n_accept += 1
+                        if loss < isl.best_loss:
+                            isl.best_loss = loss
+                            isl.best_transforms = isl.transforms
+                            isl.best_fq = isl.fq_stack
+                    isl.history.append(
+                        (step, loss, float(ce), float(mse), accepted))
+                if migrate_every and n_islands > 1 \
+                        and step % migrate_every == 0:
+                    n_migrated = migrate(islands)
+                    stats["migrations"] += n_migrated
+                    metrics["migrations"].inc(n_migrated)
+            metrics["best"].set(min(s.best_loss for s in islands))
+            metrics["temp"].set(T)
+            if scfg.log_every and step % scfg.log_every == 0:
+                best = min(s.best_loss for s in islands)
+                rate = sum(s.n_accept for s in islands) / (step * n_islands)
+                obs.emit("search", step=step, best=f"{best:.5f}",
+                         accept=f"{rate:.2%}", T=f"{T:.4g}",
+                         elapsed_s=f"{run_span.elapsed():.1f}")
 
     elite = min(islands, key=lambda s: s.best_loss)
-    stats["proposals_per_sec"] = stats["proposals"] / max(
-        time.time() - t_start, 1e-9)
+    # monotonic clock (run_span.dur): wall time steps backwards under NTP
+    stats["proposals_per_sec"] = stats["proposals"] / max(run_span.dur, 1e-9)
     return SearchResult(
         params_q=adapter.install(params_base, elite.best_fq),
         transforms=elite.best_transforms,
@@ -250,7 +295,7 @@ def run_population_search(
 
 def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
                         stats, transforms0, fq0, loss0, ce0, mse0,
-                        n_islands, migrate_every):
+                        n_islands, migrate_every, metrics):
     """The mapped island loop: one island per shard of the ("data",) mesh.
 
     Split of responsibilities, chosen so "bit-for-bit equal to sequential"
@@ -335,9 +380,13 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
     histories = [[(0, loss0, ce0, float(mse0), True)]
                  for _ in range(n_islands)]
 
-    t_start = time.time()
+    pid0 = jax.process_index() == 0
+    run_span = obs.trace_span("search.run", mode="mapped",
+                              islands=n_islands).__enter__()
     for step in range(1, scfg.steps + 1):
         T = schedule(step)
+        step_span = obs.trace_span("search.step", step=step,
+                                   hist=metrics["step"]).__enter__()
         subs = [None] * n_islands
         us = [None] * n_islands
         for i in range(n_islands):
@@ -346,15 +395,20 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
             keys[i], sub = jax.random.split(keys[i])
             subs[i] = sub
             us[i] = int(rngs[i].integers(adapter.n_units))
-        outs = {}
-        u_dev = {}
-        for i, d in local.items():   # dispatch all, then fetch (async)
-            u_dev[i] = jax.device_put(jnp.int32(us[i]), d)
-            outs[i] = step_fn(jax.device_put(subs[i], d), t_loc[i],
-                              fq_loc[i], u_dev[i])
-        scal = np.zeros((n_islands, 3), np.float32)
-        for i, out in outs.items():
-            scal[i] = [float(out[0]), float(out[1]), float(out[2])]
+        with obs.trace_span("search.eval", hist=metrics["eval"]):
+            outs = {}
+            u_dev = {}
+            for i, d in local.items():   # dispatch all, then fetch (async)
+                u_dev[i] = jax.device_put(jnp.int32(us[i]), d)
+                outs[i] = step_fn(jax.device_put(subs[i], d), t_loc[i],
+                                  fq_loc[i], u_dev[i])
+            scal = np.zeros((n_islands, 3), np.float32)
+            for i, out in outs.items():
+                scal[i] = [float(out[0]), float(out[1]), float(out[2])]
+        # each host counts only its LOCAL islands, so the dist_snapshot sum
+        # over hosts reconciles with the global stats["proposals"]
+        metrics["proposals"].inc(
+            len(outs) * max(int(getattr(scfg, "population", 1)), 1))
         if multiproc:
             scal = np.asarray(exchange(put_shd(scal)))
         for i in range(n_islands):
@@ -365,6 +419,10 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
             if accepted:
                 if delta > 0.0:
                     stats["uphill_accepts"] += 1
+                    if i in outs:
+                        metrics["uphill"].inc()
+                if i in outs:   # count local islands only (see proposals)
+                    metrics["accepts"].inc()
                 cur[i] = loss
                 n_accept[i] += 1
                 if i in outs:
@@ -399,11 +457,16 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
                 if best[src] < best[dst]:
                     best[dst] = best[src]
                 stats["migrations"] += 1
+                if pid0:   # every host replays the decision; count it once
+                    metrics["migrations"].inc()
+        step_span.__exit__(None, None, None)
+        metrics["best"].set(min(best))
+        metrics["temp"].set(T)
         if scfg.log_every and step % scfg.log_every == 0:
             rate = sum(n_accept) / (step * n_islands)
-            print(f"[search] step={step} best={min(best):.5f} "
-                  f"accept={rate:.2%} T={T:.4g} "
-                  f"({(time.time() - t_start):.1f}s) [mapped]")
+            obs.emit("search", step=step, best=f"{min(best):.5f}",
+                     accept=f"{rate:.2%}", T=f"{T:.4g}",
+                     elapsed_s=f"{run_span.elapsed():.1f}", mode="mapped")
 
     elite = int(np.argmin(np.asarray(best, np.float32)))
     bt_st = gather_island_states(bt_loc, mesh, n_islands)
@@ -421,8 +484,9 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
     best_t = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), best_t)
     best_fq = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), best_fq)
 
-    stats["proposals_per_sec"] = stats["proposals"] / max(
-        time.time() - t_start, 1e-9)
+    run_span.__exit__(None, None, None)
+    # monotonic clock (run_span.dur): wall time steps backwards under NTP
+    stats["proposals_per_sec"] = stats["proposals"] / max(run_span.dur, 1e-9)
     return SearchResult(
         params_q=adapter.install(env["params_base"], best_fq),
         transforms=best_t,

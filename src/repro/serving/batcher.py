@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.config import ModelConfig
 from repro.serving.decode import (make_paged_decode_step, request_key,
                                  sample_logits_per_seq)
@@ -117,7 +118,8 @@ class ContinuousBatcher:
                  scheduler: Optional[Scheduler] = None,
                  prefix_cache: Union[bool, PrefixCache] = False,
                  prefix_cache_entries: Optional[int] = None,
-                 gqa_pages_per_block: int = 1):
+                 gqa_pages_per_block: int = 1,
+                 registry=None):
         self.params = params_q
         self.cfg = cfg
         self.cache = cache
@@ -143,11 +145,53 @@ class ContinuousBatcher:
         self._ticket = 0
         self._arrival = 0
         self._t_submit: Dict[int, float] = {}
-        self.ttft_s: List[float] = []   # submit -> first token, per request
         self.stats = {"steps": 0, "prefills": 0, "prefill_chunks": 0,
                       "evictions": 0, "peak_pages": 0, "prefill_tokens": 0,
                       "prefill_tokens_saved": 0, "aliased_pages": 0,
                       "dedup_admits": 0, "cow_forks": 0}
+        reg = registry if registry is not None else obs.get_registry()
+        self.obs = {
+            "ttft": reg.histogram(
+                "serving_ttft_seconds", "Submit-to-first-token latency"),
+            "tpot": reg.histogram(
+                "serving_tpot_seconds",
+                "One jitted decode step (time per output token)"),
+            "prefill": reg.histogram(
+                "serving_prefill_seconds",
+                "Chunked prefill latency per admitted request"),
+            "queue_depth": reg.gauge(
+                "serving_queue_depth", "Queued requests at the last step"),
+            "pages_in_use": reg.gauge(
+                "serving_pages_in_use",
+                "Live (non-reserved) pages at the last step"),
+            "page_util": reg.gauge(
+                "serving_page_utilization",
+                "Live pages / allocatable pages at the last step"),
+            "shared_pages": reg.gauge(
+                "serving_shared_pages",
+                "Distinct live pages with refcount > 1 at the last step"),
+            "prefill_tokens": reg.counter(
+                "serving_prefill_tokens_total", "Prompt tokens prefilled"),
+            "tokens_saved": reg.counter(
+                "serving_prefill_tokens_saved_total",
+                "Prompt tokens skipped via prefix aliasing / dedup"),
+            "aliased": reg.counter(
+                "serving_aliased_pages_total",
+                "Pages adopted from the prefix cache or a twin slot"),
+            "dedup": reg.counter(
+                "serving_dedup_admits_total",
+                "Requests admitted by duplicate-content aliasing"),
+            "cow": reg.counter(
+                "serving_cow_forks_total", "Copy-on-write page forks"),
+            "lru_retired": reg.counter(
+                "serving_prefix_lru_retired_total",
+                "Prefix-cache pages retired under allocation backpressure"),
+            "preempt": reg.counter(
+                "serving_preemptions_total",
+                "Recompute preemptions (labelled by triggering reason)"),
+            "decode_steps": reg.counter(
+                "serving_decode_steps_total", "Jitted decode steps run"),
+        }
 
     # -- admission ---------------------------------------------------------
 
@@ -175,7 +219,7 @@ class ContinuousBatcher:
         if not req.out:           # re-admits already produced their first token
             t0 = self._t_submit.pop(id(req), None)
             if t0 is not None:
-                self.ttft_s.append(time.monotonic() - t0)
+                self.obs["ttft"].observe(time.monotonic() - t0)
 
     def _first_token(self, req: PagedRequest, logits_row) -> int:
         """Select the token that follows the prefilled prompt.
@@ -204,7 +248,8 @@ class ContinuousBatcher:
             return []
         got = self.cache.allocator.alloc(n)
         if got is None and self.prefix is not None:
-            self.prefix.evict_lru(n - self.cache.allocator.num_free)
+            retired = self.prefix.evict_lru(n - self.cache.allocator.num_free)
+            self.obs["lru_retired"].inc(retired)
             got = self.cache.allocator.alloc(n)
         return got
 
@@ -250,13 +295,19 @@ class ContinuousBatcher:
         page_ids = matched + fresh
         bt = jnp.asarray(self.cache.block_table_row(page_ids)[None])
         start = len(matched) * psz
-        logits_row, self.cache.pools, n_chunks = run_prefill_chunks(
-            self._prefill_chunk, self.params, self.cache.pools, full, bt,
-            page_size=psz, chunk_pages=self.prefill_chunk_pages, start=start)
+        with obs.trace_span("serve.prefill", tokens=plen - start,
+                            hist=self.obs["prefill"]):
+            logits_row, self.cache.pools, n_chunks = run_prefill_chunks(
+                self._prefill_chunk, self.params, self.cache.pools, full, bt,
+                page_size=psz, chunk_pages=self.prefill_chunk_pages,
+                start=start)
         self.stats["prefill_chunks"] += n_chunks
         self.stats["prefill_tokens"] += plen - start
         self.stats["prefill_tokens_saved"] += start
         self.stats["aliased_pages"] += len(matched)
+        self.obs["prefill_tokens"].inc(plen - start)
+        self.obs["tokens_saved"].inc(start)
+        self.obs["aliased"].inc(len(matched))
         if self.prefix is not None:
             for i in range(len(matched), plen // psz):
                 self.prefix.insert(keys[i], page_ids[i])
@@ -308,6 +359,9 @@ class ContinuousBatcher:
             self.stats["dedup_admits"] += 1
             self.stats["prefill_tokens_saved"] += plen
             self.stats["aliased_pages"] += len(page_ids)
+            self.obs["dedup"].inc()
+            self.obs["tokens_saved"].inc(plen)
+            self.obs["aliased"].inc(len(page_ids))
             self._ticket += 1
             slot = _Slot(req=q, page_ids=list(page_ids), seq_len=plen,
                          last_tok=nxt, ticket=self._ticket,
@@ -331,12 +385,13 @@ class ContinuousBatcher:
         self.cache.allocator.release(slot.page_ids)
         self.slots[i] = None
 
-    def _evict_one(self) -> bool:
+    def _evict_one(self, reason: str = "page_capacity") -> bool:
         """Preempt the scheduler's victim back to the queue head."""
         vi = self.scheduler.pick_victim(self)
         if vi is None:
             return False  # never evict the only runner: no forward progress
         self.stats["evictions"] += 1
+        self.obs["preempt"].inc(reason=reason)
         self.queue.appendleft(self.slots[vi].req)
         self._release(vi)
         return True
@@ -386,8 +441,9 @@ class ContinuousBatcher:
                     slot.page_ids[idx] = got[0]
                     self.cache.allocator.release([old])
                     self.stats["cow_forks"] += 1
+                    self.obs["cow"].inc()
                     break
-                if not self._evict_one():
+                if not self._evict_one(reason="cow_fork"):
                     raise RuntimeError(
                         "page pool exhausted: cannot copy-on-write fork a "
                         "shared page; grow n_pages")
@@ -443,20 +499,30 @@ class ContinuousBatcher:
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return 0
-        in_use = self.cache.allocator.n_pages - self.cache.allocator.reserved \
-            - self.cache.allocator.num_free
+        alloc = self.cache.allocator
+        in_use = alloc.n_pages - alloc.reserved - alloc.num_free
         self.stats["peak_pages"] = max(self.stats["peak_pages"], in_use)
+        self.obs["queue_depth"].set(len(self.queue))
+        self.obs["pages_in_use"].set(in_use)
+        allocatable = max(alloc.n_pages - alloc.reserved, 1)
+        self.obs["page_util"].set(in_use / allocatable)
+        held = {pid for i in live for pid in self.slots[i].page_ids}
+        self.obs["shared_pages"].set(
+            sum(1 for pid in held if alloc.refcount(pid) > 1))
         toks, bt, lens = self._batch_arrays()
-        if any(self.slots[i].req.temperature > 0.0 for i in live):
-            seeds, idx, temps, top_ks = self._sampling_arrays()
-            next_toks, self.cache.pools = self.sampled_step_fn(
-                self.params, toks, self.cache.pools, bt, lens, seeds, idx,
-                temps, top_ks)
-        else:  # all-greedy: the original 5-arg step, byte-identical output
-            next_toks, self.cache.pools = self.step_fn(
-                self.params, toks, self.cache.pools, bt, lens)
-        next_toks = np.asarray(next_toks)
+        with obs.trace_span("serve.decode_step", live=len(live),
+                            hist=self.obs["tpot"]):
+            if any(self.slots[i].req.temperature > 0.0 for i in live):
+                seeds, idx, temps, top_ks = self._sampling_arrays()
+                next_toks, self.cache.pools = self.sampled_step_fn(
+                    self.params, toks, self.cache.pools, bt, lens, seeds,
+                    idx, temps, top_ks)
+            else:  # all-greedy: the original 5-arg step, byte-identical
+                next_toks, self.cache.pools = self.step_fn(
+                    self.params, toks, self.cache.pools, bt, lens)
+            next_toks = np.asarray(next_toks)   # the device sync
         self.stats["steps"] += 1
+        self.obs["decode_steps"].inc()
         for i in live:
             slot = self.slots[i]
             slot.seq_len += 1
@@ -469,6 +535,13 @@ class ContinuousBatcher:
             self._finish_if_done(i)
         return len(live)
 
+    def _reset_run_state(self) -> None:
+        """Drop per-run bookkeeping so a reused batcher does not accumulate
+        state across ``run()`` calls (``done`` and the submit stamps used to
+        grow without bound; durable metrics live in the registry)."""
+        self.done.clear()
+        self._t_submit.clear()
+
     def run(self, requests) -> List[List[int]]:
         """Serve a request list to completion; outputs in submission order.
 
@@ -476,6 +549,7 @@ class ContinuousBatcher:
         both stop appending at the budget), so no output truncation is
         needed here.
         """
+        self._reset_run_state()
         for r in requests:
             self.submit(r)
         while self.queue or any(s is not None for s in self.slots):
