@@ -9,16 +9,13 @@ full-size configs are exercised structurally by the dry-run.
 """
 from __future__ import annotations
 
-import os
 import pathlib
 import sys
 import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.objective import calib_ce

@@ -6,7 +6,6 @@ base method.
 """
 import json
 
-import jax
 
 from benchmarks.common import (ART, bench_model, calib_set, heldout_set, ppl,
                                emit, timed)

@@ -4,7 +4,6 @@ on top of AWQ.
 Claim replicated: each transform alone improves over AWQ; combining all three
 is the best (synergy).
 """
-import dataclasses
 import json
 
 from benchmarks.common import ART, bench_model, calib_set, heldout_set, ppl, emit, timed

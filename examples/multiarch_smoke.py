@@ -10,7 +10,6 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.core.quant import QuantConfig

@@ -15,7 +15,8 @@ HEAD = """# EXPERIMENTS — InvarExplore reproduction + multi-pod framework
 
 All numbers in this file are produced by code in this repository:
 - benchmark tables: `PYTHONPATH=src python -m benchmarks.run` (JSON in `artifacts/benchmarks/`)
-- dry-run / roofline: `PYTHONPATH=src python -m repro.launch.dryrun --all` (JSON per cell in `artifacts/dryrun/`)
+- dry-run / roofline: `PYTHONPATH=src python -m repro.launch.dryrun --all`
+  (JSON per cell in `artifacts/dryrun/`)
 - this file: `PYTHONPATH=src python scripts/gen_experiments.py`
 
 Hardware target: TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI);

@@ -1,0 +1,16 @@
+"""repro.analysis: the repo's own static-analysis pass.
+
+``python -m repro.analysis src`` runs five AST-plus-abstract-eval checkers
+guarding invariants no generic linter knows about (jit purity, PRNG key
+discipline, monotonic-clock durations, Pallas VMEM budgets, obs-registry
+hygiene), compares against the committed ``analysis_baseline.json`` and
+fails only on NEW findings. See README "Static analysis".
+"""
+from repro.analysis.framework import (CHECKERS, AnalysisReport, Checker,
+                                      Finding, SourceFile,
+                                      diff_against_baseline, load_baseline,
+                                      run_analysis, save_baseline)
+
+__all__ = ["CHECKERS", "AnalysisReport", "Checker", "Finding", "SourceFile",
+           "run_analysis", "load_baseline", "save_baseline",
+           "diff_against_baseline"]

@@ -1,0 +1,184 @@
+"""pallas-budget checker: VMEM strips must fit, at lint time.
+
+``transform_quant`` guards its Pallas path at runtime: shapes that blow the
+``_TQ_STRIP_BYTES`` VMEM budget (or break grid/block divisibility) silently
+fall back to the jnp reference — correct, but the fused kernel's whole
+point is performance, and a config that *always* falls back should be a
+lint finding, not a surprise in a profile. This checker replays the
+wrapper's planner (``repro.kernels.ops.tq_plan`` — the same code the
+runtime guard calls) over every architecture in the config zoo:
+
+- for each config with an FFN, the search adapters quantize
+  ``up``-family weights of shape (d_model, d_ff) in ``mode="up"`` and the
+  ``down`` projection (d_ff, d_model) in ``mode="down"`` under the
+  canonical search ``QuantConfig(bits=2, group_size=32)``;
+- each weight is abstract-evaluated through the real wrapper with
+  ``jax.eval_shape`` (catching group-divisibility and shape-contract
+  breaks without touching a device), then ``tq_plan`` delivers the
+  strip-bytes / divisibility verdict.
+
+Findings anchor at the ``pl.pallas_call`` site inside
+``transform_quant_pallas`` — the kernel the config can't use. Expected
+fallbacks (large-d_ff archs awaiting the two-stage ROADMAP variant) live
+in the committed baseline.
+
+Fixture/self-test hook: any scanned file may declare a literal
+``TQ_SHAPE_PROBES = [(K, N, group, "mode"), ...]``; each failing probe is
+a finding at the declaration — this is how the checker's own test corpus
+exercises the budget logic without importing the zoo.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.framework import Checker, Finding, SourceFile, register
+
+RULE = "pallas-budget"
+
+# the canonical search quantization the zoo is validated under
+_BITS, _GROUP_SIZE = 2, 32
+
+
+def zoo_units() -> List[dict]:
+    """One row per (arch, projection): the transform_quant call shapes the
+    search adapters produce, with the planner's verdict and — when jax is
+    importable — the ``jax.eval_shape`` result through the real wrapper."""
+    import functools
+
+    from repro.configs import get_config, list_archs
+    from repro.core.quant import QuantConfig
+    from repro.kernels import ops
+
+    qcfg = QuantConfig(bits=_BITS, group_size=_GROUP_SIZE)
+    rows: List[dict] = []
+    for arch in list_archs() + ["opt-1.3b"]:
+        cfg = get_config(arch)
+        d, f = cfg.d_model, cfg.d_ff
+        if not f:  # pure-SSM archs have no FFN unit to transform
+            rows.append({"arch": arch, "proj": None, "ok": True,
+                         "reason": "no FFN"})
+            continue
+        for proj, K, N, mode in (("up", d, f, "up"), ("down", f, d, "down")):
+            row = {"arch": arch, "proj": proj, "K": K, "N": N, "mode": mode,
+                   "group": None, "ok": False, "strip_bytes": 0,
+                   "reason": "", "eval_shape": None}
+            try:
+                group = qcfg.resolve_group(K)
+            except ValueError as e:
+                row["reason"] = f"group resolution failed: {e}"
+                rows.append(row)
+                continue
+            row["group"] = group
+            plan = ops.tq_plan(K, N, group=group, mode=mode)
+            row.update(ok=plan.ok, strip_bytes=plan.strip_bytes,
+                       reason=plan.reason)
+            try:
+                import jax
+                import jax.numpy as jnp
+                w = jax.ShapeDtypeStruct((K, N), jnp.float32)
+                pi = jax.ShapeDtypeStruct((plan.f,), jnp.int32)
+                s = jax.ShapeDtypeStruct((plan.f,), jnp.float32)
+                phi = jax.ShapeDtypeStruct((plan.f // 2,), jnp.float32)
+                out = jax.eval_shape(
+                    functools.partial(ops.transform_quant, bits=_BITS,
+                                      group=group, mode=mode,
+                                      use_pallas=False), w, pi, s, phi)
+                row["eval_shape"] = tuple(tuple(o.shape) for o in out)
+                if tuple(out[0].shape) != (K, N):
+                    row["ok"] = False
+                    row["reason"] = (f"eval_shape contract break: fq shape "
+                                     f"{tuple(out[0].shape)} != {(K, N)}")
+            except ImportError:
+                pass  # planner verdict stands; abstract eval needs jax
+            rows.append(row)
+    return rows
+
+
+def _find_anchor(files: Sequence[SourceFile]) -> Optional[Tuple[SourceFile,
+                                                                int]]:
+    """The ``pl.pallas_call`` inside ``transform_quant_pallas``."""
+    for sf in files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.FunctionDef) and \
+                    node.name == "transform_quant_pallas":
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        try:
+                            callee = ast.unparse(sub.func)
+                        except Exception:  # pragma: no cover
+                            continue
+                        if callee.split(".")[-1] == "pallas_call":
+                            return sf, sub.lineno
+    return None
+
+
+def _literal_probes(sf: SourceFile) -> List[Tuple[int, Tuple]]:
+    """(line, (K, N, group, mode)) per entry of a literal TQ_SHAPE_PROBES."""
+    out: List[Tuple[int, Tuple]] = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "TQ_SHAPE_PROBES"
+                for t in node.targets)):
+            continue
+        try:
+            probes = ast.literal_eval(node.value)
+        except (ValueError, SyntaxError):
+            continue
+        for entry in probes:
+            out.append((node.lineno, tuple(entry)))
+    return out
+
+
+@register
+class PallasBudgetChecker(Checker):
+    name = RULE
+    description = ("transform_quant shapes across the config zoo fit the "
+                   "_TQ_STRIP_BYTES VMEM budget and tiling constraints")
+    bug_class = "silent jnp-reference fallback on the fused hot path"
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        from repro.kernels import ops
+
+        findings: List[Finding] = []
+        for line, entry in _literal_probes(sf):
+            try:
+                K, N, group, mode = entry
+                plan = ops.tq_plan(int(K), int(N), group=int(group),
+                                   mode=str(mode))
+            except (TypeError, ValueError) as e:
+                findings.append(Finding(
+                    rule=self.name, path=sf.rel, line=line,
+                    symbol=sf.symbol_at(line),
+                    message=f"malformed TQ_SHAPE_PROBES entry {entry!r}: "
+                            f"{e}"))
+                continue
+            if not plan.ok:
+                findings.append(Finding(
+                    rule=self.name, path=sf.rel, line=line,
+                    symbol=sf.symbol_at(line),
+                    message=(f"probe (K={K}, N={N}, group={group}, "
+                             f"mode={mode}) cannot use the Pallas kernel: "
+                             f"{plan.reason}")))
+        return findings
+
+    def check_project(self, files: Sequence[SourceFile]) -> Iterable[Finding]:
+        anchor = _find_anchor(files)
+        if anchor is None:
+            return []  # kernel not in the scan set (e.g. fixture runs)
+        sf, line = anchor
+        symbol = sf.symbol_at(line)
+        findings: List[Finding] = []
+        for row in zoo_units():
+            if row["ok"] or row["proj"] is None:
+                continue
+            findings.append(Finding(
+                rule=self.name, path=sf.rel, line=line, symbol=symbol,
+                message=(f"config {row['arch']} ffn_{row['proj']} "
+                         f"(K={row['K']}, N={row['N']}, "
+                         f"group={row['group']}, mode={row['mode']}) "
+                         f"falls back to the jnp reference: "
+                         f"{row['reason']}")))
+        return findings

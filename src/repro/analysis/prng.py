@@ -1,0 +1,228 @@
+"""PRNG-discipline checker: a JAX key is consumed exactly once.
+
+``jax.random`` is counter-based: passing the same key to two samplers (or to
+a sampler and a later ``split``) yields CORRELATED streams, and carrying a
+key across loop iterations without re-splitting replays the same stream
+every iteration. Both are silent — outputs look random — which is exactly
+why the PR 4 sample-stream fork shipped. This checker tracks key-valued
+expressions per function body:
+
+- a binding is any assignment from ``PRNGKey`` / ``key`` / ``split`` /
+  ``fold_in`` (tuple targets of ``split`` bind every element), plus
+  parameters with key-ish names (``key``, ``rng``, ``*_key``, ``*_rng``);
+- a consumption is that expression appearing as the first argument of any
+  ``jax.random.*`` call (samplers, ``split`` and ``fold_in`` all consume).
+
+Flagged:
+
+- **reuse**: the same key expression consumed twice with no rebinding in
+  between (``k, sub = split(k)`` on one line rebinds, so the engine's
+  ``isl.key, sub = jax.random.split(isl.key)`` idiom passes);
+- **loop-carry**: a key bound before a ``for``/``while`` consumed inside it
+  without an in-loop rebinding. Indexing a pre-split key array by the loop
+  variable (``ks[i]``) is the correct idiom and is exempt.
+
+Tracking is by source text (``ast.unparse``) of the key expression, so
+``self.key`` / ``keys[i]`` / plain names all participate without real
+dataflow analysis — cheap, and precise enough for this codebase's idioms.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.analysis.framework import Checker, Finding, SourceFile, register
+
+RULE = "prng-discipline"
+
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in"}
+_KEY_PARAM_RE = re.compile(r"(^|_)(key|rng|prng)s?$")
+
+
+def _callee(call: ast.Call) -> str:
+    try:
+        return ast.unparse(call.func)
+    except Exception:  # pragma: no cover
+        return ""
+
+
+def _is_random_call(call: ast.Call) -> bool:
+    """Any ``jax.random.<fn>`` / ``random.<fn>`` / bare ``<fn>`` imported
+    from jax.random — recognized by the trailing attribute living in the
+    jax.random namespace, with the receiver not obviously something else."""
+    callee = _callee(call)
+    parts = callee.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom", "jr"):
+        return True
+    return False
+
+
+def _key_exprs_consumed(call: ast.Call) -> List[ast.expr]:
+    """The key operand(s) of a jax.random call: by convention the first
+    positional argument, or a ``key=`` keyword."""
+    if call.args:
+        return [call.args[0]]
+    return [kw.value for kw in call.keywords if kw.arg == "key"]
+
+
+class _Event:
+    __slots__ = ("pos", "kind", "expr", "node")
+
+    def __init__(self, pos: Tuple[int, int], kind: str, expr: str, node):
+        self.pos = pos        # (line, col) in statement order
+        self.kind = kind      # "bind" | "use"
+        self.expr = expr
+        self.node = node
+
+
+def _function_bodies(tree: ast.AST):
+    """Yield (qualname-ish owner node, body stmt list) for the module and
+    every def; nested defs get their own scope."""
+    yield tree, list(getattr(tree, "body", []))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def _scan_scope(fn, body: List[ast.stmt]):
+    """Collect bind/use events for key expressions in ONE scope (nested defs
+    are skipped — they are their own scope)."""
+    events: List[_Event] = []
+    keyish: Set[str] = set()
+
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = fn.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if _KEY_PARAM_RE.search(p.arg):
+                keyish.add(p.arg)
+                events.append(_Event((fn.lineno, 0), "bind", p.arg, fn))
+
+    def visit(node):
+        """Recursive walk that does NOT enter nested function scopes."""
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        if isinstance(node, ast.Call) and _is_random_call(node):
+            for key_arg in _key_exprs_consumed(node):
+                try:
+                    expr = ast.unparse(key_arg)
+                except Exception:  # pragma: no cover
+                    continue
+                events.append(_Event(
+                    (key_arg.lineno, key_arg.col_offset + 10_000),
+                    "use", expr, node))
+        if isinstance(node, ast.Assign):
+            val = node.value
+            if isinstance(val, ast.Call) and _is_random_call(val) and \
+                    _callee(val).split(".")[-1] in _KEY_MAKERS:
+                for tgt in node.targets:
+                    targets = (list(tgt.elts)
+                               if isinstance(tgt, (ast.Tuple, ast.List))
+                               else [tgt])
+                    for t in targets:
+                        try:
+                            expr = ast.unparse(t)
+                        except Exception:  # pragma: no cover
+                            continue
+                        keyish.add(expr)
+                        # binds take effect AFTER the value's uses on the
+                        # same line: sort col after the use marker
+                        events.append(_Event(
+                            (node.lineno, t.col_offset + 20_000),
+                            "bind", expr, node))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in body:
+        for child in ([stmt] if not isinstance(
+                stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) else []):
+            visit(child)
+    return events, keyish
+
+
+@register
+class PrngDisciplineChecker(Checker):
+    name = RULE
+    description = ("jax.random keys consumed more than once or carried "
+                   "across loop iterations without splitting")
+    bug_class = "correlated / forked sample streams (silent)"
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+
+        def emit(line, msg):
+            findings.append(Finding(rule=self.name, path=sf.rel, line=line,
+                                    message=msg, symbol=sf.symbol_at(line)))
+
+        for fn, body in _function_bodies(sf.tree):
+            events, keyish = _scan_scope(fn, body)
+            events.sort(key=lambda e: e.pos)
+
+            def tracked(expr: str) -> bool:
+                # "ks[0]" rides on its base "ks" (a pre-split key array)
+                return expr in keyish or expr.split("[")[0] in keyish
+
+            # --- reuse: two uses of one expr with no bind in between -----
+            last_use: Dict[str, Tuple[int, int]] = {}
+            for ev in events:
+                if not tracked(ev.expr):
+                    continue
+                if ev.kind == "bind":
+                    last_use.pop(ev.expr, None)
+                    for stale in [k for k in last_use
+                                  if k.split("[")[0] == ev.expr]:
+                        last_use.pop(stale)
+                elif ev.kind == "use":
+                    if ev.expr in last_use:
+                        emit(ev.node.lineno,
+                             f"key '{ev.expr}' consumed again without "
+                             "re-splitting")
+                    else:
+                        last_use[ev.expr] = ev.pos
+
+            # --- loop-carry: outer key consumed in a loop, no inner bind -
+            loops = [n for s in body for n in ast.walk(s)
+                     if isinstance(n, (ast.For, ast.While))]
+            for loop in loops:
+                span = (loop.lineno, getattr(loop, "end_lineno", loop.lineno))
+                loop_vars: Set[str] = set()
+                if isinstance(loop, ast.For):
+                    for sub in ast.walk(loop.target):
+                        if isinstance(sub, ast.Name):
+                            loop_vars.add(sub.id)
+                inner = [e for e in events if span[0] < e.pos[0] <= span[1]]
+                inner_binds = {e.expr for e in inner if e.kind == "bind"}
+                outer_binds = {e.expr for e in events
+                               if e.kind == "bind" and e.pos[0] < span[0]}
+
+                def bound_in(expr: str, binds: Set[str]) -> bool:
+                    return expr in binds or expr.split("[")[0] in binds
+
+                reported: Set[str] = set()
+                for ev in inner:
+                    if (ev.kind != "use" or bound_in(ev.expr, inner_binds)
+                            or not bound_in(ev.expr, outer_binds)
+                            or ev.expr in reported):
+                        continue
+                    # ks[i] with i a loop variable = pre-split array: fine
+                    if loop_vars and any(
+                            v in re.findall(r"[A-Za-z_][A-Za-z0-9_]*",
+                                            ev.expr)[1:]
+                            for v in loop_vars):
+                        continue
+                    # fold_in(key, i) with i a loop variable derives a
+                    # fresh per-iteration key — the recommended fix
+                    if (isinstance(ev.node, ast.Call)
+                            and _callee(ev.node).split(".")[-1] == "fold_in"
+                            and loop_vars
+                            and any(isinstance(a, ast.Name)
+                                    and a.id in loop_vars
+                                    for a in ev.node.args[1:])):
+                        continue
+                    reported.add(ev.expr)
+                    emit(ev.node.lineno,
+                         f"key '{ev.expr}' crosses loop iterations unsplit "
+                         "(bound before the loop; split or fold_in per "
+                         "iteration)")
+        return findings

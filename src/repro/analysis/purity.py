@@ -1,0 +1,211 @@
+"""jit-purity checker: side effects inside traced functions.
+
+A function handed to ``jax.jit`` / ``jax.pmap`` / ``shard_map`` (or defined
+under such a decorator) is traced once and replayed; anything impure in its
+body silently becomes a trace-time constant or a once-per-compile effect:
+
+- ``time.time()`` (any clock) → frozen at trace time — the wall-clock
+  ``proposals_per_sec`` bug class;
+- ``print`` → fires at trace time only (use ``jax.debug.print``);
+- mutation of a closure/global container (``stats.append(...)``) → runs once
+  per compile, not per call;
+- ``global``/``nonlocal`` rebinding → same;
+- Python ``if``/``while`` on a traced argument → ``TracerBoolError`` at best,
+  silently-specialized control flow at worst (use ``lax.cond``/``lax.select``
+  or mark the argument static).
+
+Detection is name-based and deliberately conservative: a def is a jit
+context when a jit-ish decorator sits on it or its name is passed as the
+first argument to a jit-ish call in the same module (lambdas passed inline
+are checked too). Arguments named by ``static_argnames=(...)`` literals are
+exempt from the tracer-branch rule, as are ``is None`` / ``isinstance``
+tests and attribute/subscript accesses (config objects are static).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.framework import Checker, Finding, SourceFile, register
+
+RULE = "jit-purity"
+
+# suffix-matched on the unparse of a Call's func: jax.jit, functools.partial
+# over jax.jit, pjit, shard_map, pmap all land here
+_JIT_SUFFIXES = ("jit", "pmap", "shard_map")
+_CLOCK_CALLS = {"time.time", "time.monotonic", "time.perf_counter",
+                "time.process_time", "datetime.datetime.now",
+                "datetime.now"}
+_MUTATORS = {"append", "extend", "insert", "add", "update", "setdefault",
+             "pop", "popitem", "remove", "discard", "clear", "write",
+             "writelines"}
+
+
+def _callee(call: ast.Call) -> str:
+    try:
+        return ast.unparse(call.func)
+    except Exception:  # pragma: no cover - unparse is total on parsed trees
+        return ""
+
+
+def _is_jitish(node: ast.expr) -> bool:
+    """True for ``jax.jit`` / ``shard_map`` / ``pmap`` expressions and for
+    ``functools.partial(jax.jit, ...)``-style wrappers around them."""
+    if isinstance(node, ast.Call):
+        callee = _callee(node)
+        if callee.split(".")[-1] == "partial" and node.args:
+            return _is_jitish(node.args[0])
+        return any(callee.split(".")[-1].endswith(s) for s in _JIT_SUFFIXES)
+    try:
+        name = ast.unparse(node)
+    except Exception:  # pragma: no cover
+        return False
+    return any(name.split(".")[-1].endswith(s) for s in _JIT_SUFFIXES)
+
+
+def _static_argnames(node: ast.expr) -> Set[str]:
+    """Literal ``static_argnames=`` strings on a jit-ish call, if any."""
+    out: Set[str] = set()
+    if not isinstance(node, ast.Call):
+        return out
+    for kw in node.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    out.add(sub.value)
+    if node.args and isinstance(node.args[0], ast.Call):
+        out |= _static_argnames(node.args[0])  # partial(jax.jit, ...)
+    return out
+
+
+def _jit_contexts(tree: ast.AST) -> List[Tuple[ast.AST, Set[str]]]:
+    """(function_node, static_argnames) for every traced def/lambda."""
+    defs = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+    out: List[Tuple[ast.AST, Set[str]]] = []
+    seen = set()
+
+    def add(fn, statics):
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            out.append((fn, statics))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jitish(dec):
+                    add(node, _static_argnames(dec))
+        if isinstance(node, ast.Call) and _is_jitish(node) and node.args:
+            target = node.args[0]
+            statics = _static_argnames(node)
+            if isinstance(target, ast.Lambda):
+                add(target, statics)
+            elif isinstance(target, ast.Name) and target.id in defs:
+                add(defs[target.id], statics)
+    return out
+
+
+def _params(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+    return names
+
+
+def _local_bindings(fn) -> Set[str]:
+    """Names assigned anywhere in the function body (approximate locals)."""
+    bound: Set[str] = set(_params(fn))
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                         (ast.Store,)):
+                bound.add(node.id)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                tgt = node.target
+                for sub in ast.walk(tgt):
+                    if isinstance(sub, ast.Name):
+                        bound.add(sub.id)
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                for sub in ast.walk(node.optional_vars):
+                    if isinstance(sub, ast.Name):
+                        bound.add(sub.id)
+    return bound
+
+
+def _tracer_names_in_test(test: ast.expr) -> Iterable[ast.Name]:
+    """Bare Name loads that decide the branch: the test itself, ``not x``,
+    BoolOp operands, and Compare sides — but not ``is (not) None`` compares,
+    not call arguments, not attribute/subscript bases."""
+    stack: List[ast.expr] = [test]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            yield node
+        elif isinstance(node, ast.BoolOp):
+            stack.extend(node.values)
+        elif isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+            stack.append(node.operand)
+        elif isinstance(node, ast.Compare):
+            if any(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                continue
+            stack.append(node.left)
+            stack.extend(node.comparators)
+
+
+@register
+class JitPurityChecker(Checker):
+    name = RULE
+    description = ("side effects / host branching inside functions traced "
+                   "by jax.jit, pmap or shard_map")
+    bug_class = ("trace-time-frozen clocks, once-per-compile effects, "
+                 "tracer control flow")
+
+    def check_file(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+
+        def emit(line, msg):
+            findings.append(Finding(rule=self.name, path=sf.rel, line=line,
+                                    message=msg, symbol=sf.symbol_at(line)))
+
+        for fn, statics in _jit_contexts(sf.tree):
+            params = set(_params(fn))
+            traced = params - statics
+            local = _local_bindings(fn)
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Call):
+                        callee = _callee(node)
+                        if callee in _CLOCK_CALLS:
+                            emit(node.lineno,
+                                 f"{callee}() inside a jitted function is a "
+                                 "trace-time constant")
+                        elif callee == "print":
+                            emit(node.lineno,
+                                 "print() inside a jitted function fires at "
+                                 "trace time only (use jax.debug.print)")
+                        elif (isinstance(node.func, ast.Attribute)
+                              and node.func.attr in _MUTATORS
+                              and isinstance(node.func.value, ast.Name)
+                              and node.func.value.id not in local):
+                            emit(node.lineno,
+                                 f"mutation of closed-over "
+                                 f"'{node.func.value.id}."
+                                 f"{node.func.attr}()' inside a jitted "
+                                 "function runs once per compile, not per "
+                                 "call")
+                    elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                        emit(node.lineno,
+                             f"{type(node).__name__.lower()} statement "
+                             "inside a jitted function rebinds at trace "
+                             "time")
+                    elif isinstance(node, (ast.If, ast.While)):
+                        for nm in _tracer_names_in_test(node.test):
+                            if nm.id in traced:
+                                emit(node.lineno,
+                                     f"Python branch on traced argument "
+                                     f"'{nm.id}' (use lax.cond/lax.select "
+                                     "or static_argnames)")
+        return findings

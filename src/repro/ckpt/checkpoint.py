@@ -39,10 +39,8 @@ Design points:
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
-import os
 import pathlib
 import threading
 import time

@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantConfig, compute_qparams, fake_quant, _grouped
+from repro.core.quant import QuantConfig, fake_quant, _grouped
 from repro.core.taps import capture_dense_taps
 from repro.models.config import ModelConfig
 from repro.models import layers as L
@@ -118,8 +118,9 @@ def awq_process_dense(params, cfg: ModelConfig, calib_tokens, qcfg: QuantConfig,
         mlp["gate"] = wg
 
     if do_clip:
-        clip = lambda w, x: jax.vmap(
-            lambda wi, xi: clip_search(wi, xi, qcfg.bits, qcfg.group_size))(w, x)
+        def clip(w, x):
+            return jax.vmap(lambda wi, xi: clip_search(
+                wi, xi, qcfg.bits, qcfg.group_size))(w, x)
         x_mid = taps["mlp_mid"].reshape(taps["mlp_mid"].shape[0], -1, cfg.d_ff)
         mlp["up"] = clip(mlp["up"], x_mlp)
         if has_gate:

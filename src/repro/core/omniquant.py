@@ -87,7 +87,8 @@ def _optimize_block(w_up, w_down, w_gate, b_up, x, bits, group_size, steps,
             d, mi, vi = _adam_update(gi, mi, vi, t + 1.0, lr)
             return p + d, mi, vi
         new = jax.tree.map(upd, theta, g, m, v)
-        is_triple = lambda x: isinstance(x, tuple)
+        def is_triple(x):
+            return isinstance(x, tuple)
         theta = jax.tree.map(lambda x: x[0], new, is_leaf=is_triple)
         m = jax.tree.map(lambda x: x[1], new, is_leaf=is_triple)
         v = jax.tree.map(lambda x: x[2], new, is_leaf=is_triple)

@@ -16,15 +16,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.core.quant import QuantConfig, fake_quant
 from repro.core.rtn import map_quantizable
 from repro.core.awq import awq_process_dense
 from repro.core.gptq import gptq_process_dense
 from repro.core.omniquant import omniquant_process_dense
-from repro.core.search import SearchConfig, run_search, run_search_hybrid, make_adapter
+from repro.core.search import SearchConfig, run_search, run_search_hybrid
 from repro.models.config import ModelConfig
 
 __all__ = ["quantize_model", "PTQResult"]

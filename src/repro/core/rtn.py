@@ -2,7 +2,6 @@
 quantizable weight (paper Table 1, 'RTN')."""
 from __future__ import annotations
 
-import jax
 
 from repro.core.quant import QuantConfig, fake_quant
 from repro.models.model import quantizable_paths

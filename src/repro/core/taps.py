@@ -33,7 +33,8 @@ def capture_dense_taps(params, cfg: ModelConfig, tokens):
         h = carry
         a_in = L.apply_norm(h, pl["ln1"], cfg.norm)
         q, k, v = L.attn_qkv(pl["attn"], cfg, a_in, positions)
-        attn = L.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, unroll=cfg.unroll_inner)
+        attn = L.blocked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                                   unroll=cfg.unroll_inner)
         attn_mid = attn.reshape(B, S, -1)
         a = attn_mid @ pl["attn"]["wo"]
         if "bo" in pl["attn"]:

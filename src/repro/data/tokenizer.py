@@ -1,7 +1,6 @@
 """Byte-level tokenizer (no external vocab files — fully offline)."""
 from __future__ import annotations
 
-import numpy as np
 
 __all__ = ["ByteTokenizer"]
 

@@ -6,10 +6,10 @@ pure-jnp reference when a shape violates the tiling constraints.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.quant_matmul import quant_matmul_pallas
@@ -20,13 +20,67 @@ from repro.kernels.paged_decode import (paged_decode_gqa_pallas,
 from repro.kernels.transform_quant import transform_quant_pallas
 
 __all__ = ["quant_matmul", "group_quant", "flash_decode", "paged_decode",
-           "transform_quant", "on_tpu"]
+           "transform_quant", "tq_plan", "TQPlan", "on_tpu"]
 
 # VMEM budget for one transform_quant full-F strip. The kernel holds an
 # input strip AND a same-size fq output strip, and both revolve per grid
 # step so Pallas double-buffers each: ~4x the strip bytes must fit in the
 # ~16MB core VMEM. Past this the wrapper falls back to the jnp reference.
 _TQ_STRIP_BYTES = 3 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TQPlan:
+    """Pure tiling/VMEM plan for one ``transform_quant`` call site.
+
+    ``ok`` mirrors the wrapper's runtime guard exactly; ``reason`` names the
+    first violated constraint when ``ok`` is False (consumed by the static
+    Pallas-budget checker so lint reports say *why* a config falls back).
+    """
+
+    ok: bool
+    strip_bytes: int
+    bg: int          # group-block rows (mode="up"; 0 otherwise)
+    bn: int          # N-block cols (mode="down"; 0 otherwise)
+    n_groups: int
+    f: int           # transformed-axis length (N for "up", K for "down")
+    reason: str = ""
+
+
+def tq_plan(K: int, N: int, *, group: int, mode: str) -> TQPlan:
+    """Plan the fused transform+fake-quant kernel for a (K, N) fp32 weight.
+
+    This is the single source of truth for the ``_TQ_STRIP_BYTES`` VMEM
+    budget and the grid/block divisibility constraints: ``transform_quant``
+    consults it at trace time to pick Pallas vs the jnp reference, and
+    ``repro.analysis``'s pallas-budget checker replays it at lint time over
+    every config in the zoo.
+    """
+    f = N if mode == "up" else K
+    n_groups = K // group if K % group == 0 else 0
+    if mode == "up":
+        bg = 4 if n_groups % 4 == 0 else (2 if n_groups % 2 == 0 else 1)
+        strip = bg * group * f * 4
+        bn = 0
+    else:
+        bg = 0
+        bn = 128 if N % 128 == 0 else (N if N <= 128 else 0)
+        strip = K * max(bn, 1) * 4
+    ok = (n_groups > 0 and f % 2 == 0 and strip <= _TQ_STRIP_BYTES
+          and (mode == "up" or bn > 0))
+    reason = ""
+    if not ok:
+        if n_groups <= 0:
+            reason = f"K={K} not divisible by group={group}"
+        elif f % 2 != 0:
+            reason = f"transformed axis f={f} is odd"
+        elif strip > _TQ_STRIP_BYTES:
+            reason = (f"VMEM strip {strip}B > _TQ_STRIP_BYTES "
+                      f"{_TQ_STRIP_BYTES}B")
+        else:
+            reason = f"mode=down N={N} has no 128-divisible block"
+    return TQPlan(ok=ok, strip_bytes=strip, bg=bg, bn=bn,
+                  n_groups=n_groups, f=f, reason=reason)
 
 
 def on_tpu() -> bool:
@@ -129,23 +183,13 @@ def transform_quant(w, pi, s, phi, *, bits: int, group: int, mode: str,
     the passes genuinely cannot be split). Returns (fq, scale, zero).
     """
     K, N = w.shape
-    f = N if mode == "up" else K
-    n_groups = K // group if K % group == 0 else 0
-    if mode == "up":
-        bg = 4 if n_groups % 4 == 0 else (2 if n_groups % 2 == 0 else 1)
-        strip = bg * group * f * 4
-        bn = 0
-    else:
-        bn = 128 if N % 128 == 0 else (N if N <= 128 else 0)
-        strip = K * max(bn, 1) * 4
-    ok = (n_groups > 0 and f % 2 == 0 and strip <= _TQ_STRIP_BYTES
-          and (mode == "up" or bn > 0))
-    if not (use_pallas and ok):
+    plan = tq_plan(K, N, group=group, mode=mode)
+    if not (use_pallas and plan.ok):
         return ref.transform_quant_ref(w, pi, s, phi, bits=bits, group=group,
                                        mode=mode)
     return transform_quant_pallas(w, pi, s, phi, bits=bits, group=group,
-                                  mode=mode, bg=bg if mode == "up" else 4,
-                                  bn=bn or 128, interpret=not on_tpu())
+                                  mode=mode, bg=plan.bg or 4,
+                                  bn=plan.bn or 128, interpret=not on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group", "use_pallas"))

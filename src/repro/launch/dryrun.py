@@ -23,10 +23,8 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
-from repro.core.quant import QuantConfig
 from repro.dist import compat
 from repro.dist.sharding import (ShardingRules, param_specs, opt_state_specs,
                                  cache_specs, data_spec, to_shardings)
@@ -113,11 +111,11 @@ def _compile_once(cfg: ModelConfig, shape: str, mesh, rules, *, want_text=False,
         step = make_serve_step(cfg)
     in_sh = _shardings_for(kind, rules, structs, cfg, info["batch"])
     in_sh = to_shardings(mesh, in_sh)
-    t0 = time.time()
+    t0 = time.monotonic()
     with mesh:
         lowered = jax.jit(step, in_shardings=in_sh).lower(*structs)
         compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     ca = compat.cost_analysis(compiled)
     ma = compiled.memory_analysis()
     txt = compiled.as_text() if want_text else None
@@ -244,7 +242,7 @@ def main(argv=None):
         for i, (a, s, mp) in enumerate(todo):
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", a, "--shape", s] + (["--multi-pod"] if mp else [])
-            t0 = time.time()
+            t0 = time.monotonic()
             r = subprocess.run(cmd, capture_output=True, text=True,
                                env={**os.environ}, timeout=3600)
             ok = "?"
@@ -252,7 +250,7 @@ def main(argv=None):
             if p.exists():
                 ok = json.loads(p.read_text()).get("ok")
             print(f"[dryrun {i+1}/{len(todo)}] {a} {s} mp={mp} ok={ok} "
-                  f"({time.time()-t0:.0f}s)", flush=True)
+                  f"({time.monotonic()-t0:.0f}s)", flush=True)
             if r.returncode != 0:
                 print(r.stderr[-1500:], flush=True)
         return
@@ -264,7 +262,9 @@ def main(argv=None):
     if rec.get("memory"):
         print(f"memory_analysis: {rec['memory']}")
     if rec.get("roofline"):
-        print(f"roofline: { {k: v for k, v in rec['roofline'].items() if isinstance(v, (int, float))} }")
+        rl = {k: v for k, v in rec["roofline"].items()
+              if isinstance(v, (int, float))}
+        print(f"roofline: {rl}")
     print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "ok") if k in rec}))
     if not rec["ok"] and "error" in rec:
         print(rec["error"])

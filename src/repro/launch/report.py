@@ -34,7 +34,8 @@ def fmt_bytes(n):
 
 def dryrun_table(cells):
     lines = [
-        "| arch | shape | 16x16 | 2x16x16 | per-dev peak GiB | args GiB | collective schedule (per-device bytes, scan body x1) |",
+        "| arch | shape | 16x16 | 2x16x16 | per-dev peak GiB | args GiB "
+        "| collective schedule (per-device bytes, scan body x1) |",
         "|---|---|---|---|---|---|---|",
     ]
     for a in ARCH_ORDER:
@@ -60,7 +61,8 @@ def dryrun_table(cells):
 
 def roofline_table(cells):
     lines = [
-        "| arch | shape | compute_s | memory_s | collective_s | dominant | MODEL_FLOPs | useful ratio | roofline frac (mfu_bound) |",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| MODEL_FLOPs | useful ratio | roofline frac (mfu_bound) |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
     for a in ARCH_ORDER:
@@ -73,7 +75,8 @@ def roofline_table(cells):
                 continue
             t = c.get("roofline")
             if not t:
-                lines.append(f"| {a} | {s} | ? | ? | ? | {'FAILED' if not c['ok'] else 'no-delta'} | - | - | - |")
+                status = 'FAILED' if not c['ok'] else 'no-delta'
+                lines.append(f"| {a} | {s} | ? | ? | ? | {status} | - | - | - |")
                 continue
             lines.append(
                 f"| {a} | {s} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "

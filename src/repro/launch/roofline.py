@@ -14,10 +14,9 @@ are parsed from ``compiled.as_text()`` result/operand shapes.
 """
 from __future__ import annotations
 
-import dataclasses
 import re
 from collections import Counter
-from typing import Dict, Optional
+from typing import Dict
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
 

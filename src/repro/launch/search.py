@@ -84,10 +84,10 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
 
     prop_before = obs.counter(
         "search_proposals_total", "Candidate transforms proposed").total()
-    t0 = time.time()
+    t0 = time.monotonic()
     result = quantize_model(params, cfg, qcfg, method="rtn",
                             calib_tokens=calib, search=scfg)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     sr = result.search
     proposals = sr.stats["proposals"] if sr.stats else steps
     # the registry must reconcile exactly with the legacy stats dict — a

@@ -250,9 +250,9 @@ def main():
         print(f"[serve] page pool: {server.cache.n_pages} x "
               f"{args.page_size}-token pages = {pool/1e6:.2f}MB "
               f"(contiguous {args.batch}x{args.max_len} cache: {dense/1e6:.2f}MB)")
-    t0 = time.time()
+    t0 = time.monotonic()
     outs = server.generate(reqs)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     n_tok = sum(len(o) for o in outs)
     print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s)")

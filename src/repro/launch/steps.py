@@ -11,7 +11,6 @@ Shapes (assignment spec):
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 

@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, make_pipeline
@@ -64,7 +63,7 @@ def train(arch: str = "opt-tiny", steps: int = 100, batch: int = 8, seq: int = 2
                   flush=True)
         return (p, o)
 
-    t0 = time.time()
+    t0 = time.monotonic()
     if ckpt:
         state, events = run_resilient(one_step, (params, opt_state), n_steps=steps,
                                       ckpt=ckpt, save_every=save_every,
@@ -75,7 +74,7 @@ def train(arch: str = "opt-tiny", steps: int = 100, batch: int = 8, seq: int = 2
         for s in range(start, steps):
             state = one_step(state, s)
         params, opt_state = state
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"[train] {steps - start} steps in {dt:.1f}s "
           f"({(steps - start) / max(dt, 1e-9):.2f} it/s); straggler flags: {watchdog.flagged}")
     return params, losses, cfg

@@ -173,7 +173,9 @@ class ModelConfig:
     def reduced(self, **overrides) -> "ModelConfig":
         """Tiny same-family config for CPU smoke tests."""
         base = dict(
-            n_layers=min(self.n_layers, 2 if self.block_pattern != "hybrid" else self.hybrid_period + 1),
+            n_layers=min(self.n_layers,
+                         2 if self.block_pattern != "hybrid"
+                         else self.hybrid_period + 1),
             d_model=64,
             n_heads=min(self.n_heads, 4) if self.n_heads else 0,
             n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
@@ -184,7 +186,8 @@ class ModelConfig:
             frontend_len=8 if self.frontend != "none" else 0,
             encoder_layers=min(self.encoder_layers, 2),
             moe=dataclasses.replace(self.moe, num_experts=4, top_k=2) if self.moe else None,
-            ssm=dataclasses.replace(self.ssm, d_state=16, head_dim=16, chunk=32) if self.ssm else None,
+            ssm=(dataclasses.replace(self.ssm, d_state=16, head_dim=16,
+                                     chunk=32) if self.ssm else None),
             remat=False,
             attn_chunk=64,
             param_dtype="float32",

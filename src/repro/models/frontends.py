@@ -22,7 +22,8 @@ def stub_vision_embeds(key, cfg: ModelConfig, batch: int, n_patches: int = None)
 def stub_audio_frames(key, cfg: ModelConfig, batch: int, n_frames: int):
     """Precomputed speech frame embeddings (B, T, D) — stands in for the
     Seamless speech frontend (fbank + conformer downsampling)."""
-    return jax.random.normal(key, (batch, n_frames, cfg.d_model), jnp.dtype(cfg.compute_dtype)) * 0.02
+    return jax.random.normal(key, (batch, n_frames, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype)) * 0.02
 
 
 def frontend_spec(cfg: ModelConfig, batch: int, length: int):

@@ -1,8 +1,6 @@
 """Shared neural building blocks: norms, RoPE, blocked attention, MLP, MoE."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

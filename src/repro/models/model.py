@@ -7,8 +7,6 @@ weights are ever materialised (this is where 2-bit serving saves HBM).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -235,12 +233,14 @@ def forward(params, cfg: ModelConfig, tokens, *, enc_embeds=None, vision_embeds=
         def body(carry, pl):
             out, _ = _dense_body(pl, cfg, carry, positions, enc_h=enc_h)
             return out, out if collect_hidden else None
-        h, hidden = jax.lax.scan(_maybe_remat(body, cfg), h, params["blocks"], unroll=cfg.unroll_layers)
+        h, hidden = jax.lax.scan(_maybe_remat(body, cfg), h, params["blocks"],
+                                 unroll=cfg.unroll_layers)
     elif cfg.block_pattern == "ssm":
         def body(carry, pl):
             out, _ = _ssm_body(pl, cfg, carry)
             return out, out if collect_hidden else None
-        h, hidden = jax.lax.scan(_maybe_remat(body, cfg), h, params["blocks"], unroll=cfg.unroll_layers)
+        h, hidden = jax.lax.scan(_maybe_remat(body, cfg), h, params["blocks"],
+                                 unroll=cfg.unroll_layers)
     elif cfg.block_pattern == "hybrid":
         h, hidden = _hybrid_forward(params, cfg, h, positions, collect_hidden)
     else:
@@ -338,7 +338,6 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, index):
 
     Returns (logits (B, 1, V), new_cache).
     """
-    B = tokens.shape[0]
     h = embed_tokens(params, cfg, tokens, index + jnp.arange(1))
     positions = index + jnp.arange(1)
 
@@ -356,10 +355,12 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, index):
 
         kv_slices = {k: v for k, v in cache.items() if k != "cross"}
         if cross is not None:
-            h, new_kv = jax.lax.scan(body, h, (params["blocks"], kv_slices, cross), unroll=cfg.unroll_layers)
+            h, new_kv = jax.lax.scan(body, h, (params["blocks"], kv_slices, cross),
+                                     unroll=cfg.unroll_layers)
             new_cache = {**new_kv, "cross": cross}
         else:
-            h, new_kv = jax.lax.scan(body, h, (params["blocks"], kv_slices), unroll=cfg.unroll_layers)
+            h, new_kv = jax.lax.scan(body, h, (params["blocks"], kv_slices),
+                                     unroll=cfg.unroll_layers)
             new_cache = new_kv
     elif cfg.block_pattern == "ssm":
         def body(carry, xs):
@@ -443,14 +444,16 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int, *, enc_embeds=None,
                 out, nc = _dense_body_cached_cross(pl, cfg, carry, positions, c, 0, xkv)
                 return out, nc
             kv = {k: v for k, v in cache.items() if k != "cross"}
-            h, new_kv = jax.lax.scan(body, h, (params["blocks"], kv, cross), unroll=cfg.unroll_layers)
+            h, new_kv = jax.lax.scan(body, h, (params["blocks"], kv, cross),
+                                     unroll=cfg.unroll_layers)
             new_cache = {**new_kv, "cross": cross}
         else:
             def body(carry, xs):
                 pl, c = xs
                 out, nc = _dense_body(pl, cfg, carry, positions, cache=c, cache_index=0)
                 return out, nc
-            h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache), unroll=cfg.unroll_layers)
+            h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache),
+                                        unroll=cfg.unroll_layers)
     elif cfg.block_pattern == "ssm":
         # full-sequence forward capturing each layer's final SSD + conv state
         def body(carry, xs):
@@ -477,7 +480,6 @@ def _hybrid_prefill(params, cfg: ModelConfig, h, positions, max_len: int):
     shared = params["shared"]
     B = h.shape[0]
     dt = jnp.dtype(cfg.compute_dtype)
-    hd = cfg.resolved_head_dim
 
     grouped_p = jax.tree.map(lambda x: x[:n_group_m].reshape((n_a, per_group) + x.shape[1:]),
                              params["blocks"])
@@ -499,7 +501,8 @@ def _hybrid_prefill(params, cfg: ModelConfig, h, positions, max_len: int):
         h, nc = _dense_body(shared, cfg, h, positions, cache=empty_kv, cache_index=0)
         return h, (gs, nc)
 
-    h, (grouped_states, attn_caches) = jax.lax.scan(group_body, h, grouped_p, unroll=cfg.unroll_layers)
+    h, (grouped_states, attn_caches) = jax.lax.scan(group_body, h, grouped_p,
+                                                    unroll=cfg.unroll_layers)
     if n_m - n_group_m > 0:
         h, tail_states = mamba_scan_state(h, tail_p)
         ssm_states = jax.tree.map(

@@ -3,8 +3,15 @@
 ``trace_span(name, **attrs)`` is a context manager that emits a begin event
 (``{"ph": "B", "name", "ts", ...attrs}``) and an end event
 (``{"ph": "E", "name", "ts", "dur_s"}``) to the configured sink, measuring
-the duration on the MONOTONIC clock (``ts`` stays wall time so hosts can be
-lined up). With no sink configured a span still times itself — callers use
+the duration on the MONOTONIC clock. Event ``ts`` values are wall-clock
+*valued* but monotonically *derived*: the module captures one
+(wall, monotonic) epoch anchor pair at import, every subsequent ``ts`` is
+``anchor_wall + (monotonic() - anchor_mono)``, and each sink gets the
+anchor written once as a ``{"ph": "M", "name": "clock_anchor"}`` metadata
+event. Hosts still line up (via the anchor) but an NTP step mid-run can no
+longer reorder or overlap spans within a trace — ``E.ts - B.ts`` is exactly
+``dur_s`` by construction. With no sink configured a span still times
+itself — callers use
 ``span.dur`` / ``span.elapsed()`` for metrics — at the cost of two
 ``perf_counter``-class calls, so instrumenting a hot loop is safe.
 
@@ -37,6 +44,23 @@ _sink: Optional[IO] = None
 _sink_owned = False        # opened by us (close on replace) vs caller-owned
 _xprof_default = False
 
+# one epoch anchor per process: all event timestamps derive from the
+# monotonic clock relative to this pair, so wall-clock adjustments cannot
+# shuffle spans within a trace
+_EPOCH_WALL = time.time()
+_EPOCH_MONO = time.monotonic()
+
+
+def _now_ts() -> float:
+    """Wall-valued, monotonically-derived timestamp."""
+    return _EPOCH_WALL + (time.monotonic() - _EPOCH_MONO)
+
+
+def _write_anchor() -> None:
+    """Stamp the sink with the epoch anchor (once per installed sink)."""
+    _write({"ph": "M", "name": "clock_anchor",
+            "wall": _EPOCH_WALL, "mono": _EPOCH_MONO})
+
 
 def enable_xprof(on: bool = True) -> None:
     """Process default for the ``jax.profiler`` annotation passthrough."""
@@ -66,6 +90,8 @@ def set_trace_sink(sink: Union[str, IO, None]) -> None:
             except OSError:
                 pass
         _sink, _sink_owned = new, owned
+    if new is not None:
+        _write_anchor()
 
 
 def get_trace_sink() -> Optional[IO]:
@@ -85,6 +111,8 @@ class trace_to:
         with _lock:
             self._prev, self._prev_owned = _sink, _sink_owned
             _sink, _sink_owned = new, owned
+        if new is not None:
+            _write_anchor()
         return self
 
     def __exit__(self, *exc):
@@ -134,7 +162,7 @@ class trace_span:
             self._annotation = _make_annotation(self.name, self.attrs)
             if self._annotation is not None:
                 self._annotation.__enter__()
-        self.t_wall = time.time()
+        self.t_wall = _now_ts()
         self._t0 = time.monotonic()
         if _sink is not None:
             _write({"ph": "B", "name": self.name, "ts": self.t_wall,
@@ -149,7 +177,9 @@ class trace_span:
         if self.hist is not None:
             self.hist.observe(self.dur, **self.hist_labels)
         if _sink is not None:
-            _write({"ph": "E", "name": self.name, "ts": time.time(),
+            # derived from the begin stamp so E.ts - B.ts == dur_s exactly
+            _write({"ph": "E", "name": self.name,
+                    "ts": self.t_wall + self.dur,
                     "dur_s": self.dur,
                     **({"error": repr(exc)} if exc is not None else {})})
         return False
@@ -172,7 +202,7 @@ def _make_annotation(name: str, attrs: dict):
 def emit(name: str, _print: bool = True, **fields) -> str:
     """Structured instant event + compact human line. Returns the line."""
     if _sink is not None:
-        _write({"ph": "i", "name": name, "ts": time.time(), **fields})
+        _write({"ph": "i", "name": name, "ts": _now_ts(), **fields})
     line = f"[{name}] " + " ".join(f"{k}={v}" for k, v in fields.items())
     if _print:
         print(line, flush=True)

@@ -29,7 +29,8 @@ class AdamWConfig:
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -50,7 +51,8 @@ def cosine_schedule(cfg: AdamWConfig) -> Callable:
         warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
         t = jnp.clip((step - cfg.warmup_steps) /
                      jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
-        cos = cfg.min_lr_frac * cfg.lr + 0.5 * (1 - cfg.min_lr_frac) * cfg.lr * (1 + jnp.cos(jnp.pi * t))
+        cos = (cfg.min_lr_frac * cfg.lr
+           + 0.5 * (1 - cfg.min_lr_frac) * cfg.lr * (1 + jnp.cos(jnp.pi * t)))
         return jnp.where(step < cfg.warmup_steps, warm, cos)
     return lr_at
 

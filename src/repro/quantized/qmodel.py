@@ -12,7 +12,6 @@ import jax.numpy as jnp
 
 from repro.core.quant import QuantConfig, QTensor, quantize_tensor
 from repro.core.rtn import map_quantizable
-from repro.models.config import ModelConfig
 
 __all__ = ["pack_model", "packed_bytes", "dense_bytes", "cache_bytes",
            "serving_memory_report"]

@@ -130,7 +130,6 @@ def paged_attention_block(p, cfg: ModelConfig, x, pools, block_tables,
     """
     positions = seq_lens[:, None]                       # (B, 1) write position
     q, k, v = L.attn_qkv(p, cfg, x, positions)
-    B = q.shape[0]
     psz = pools["k"].shape[1]
     phys = jnp.take_along_axis(block_tables, (seq_lens // psz)[:, None],
                                axis=1)[:, 0]            # (B,) physical page

@@ -13,7 +13,6 @@ except ModuleNotFoundError:
     hypothesis_fallback.install()
 
 import jax
-import numpy as np
 import pytest
 
 

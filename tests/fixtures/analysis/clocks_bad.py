@@ -1,0 +1,15 @@
+"""Fixture: wall-clock durations (2 findings expected)."""
+import time
+from time import time as now
+
+
+def bad_direct():
+    t0 = time.time()
+    work = sum(range(10))
+    dt = time.time() - t0        # NTP slew makes this negative
+    return work, dt
+
+
+def bad_alias():
+    t0 = now()
+    return now() - t0            # aliased import resolves too

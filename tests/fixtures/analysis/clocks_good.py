@@ -1,0 +1,13 @@
+"""Fixture: monotonic durations + benign wall timestamps — zero findings."""
+import time
+
+
+def good_monotonic():
+    t0 = time.monotonic()
+    work = sum(range(10))
+    return work, time.monotonic() - t0
+
+
+def good_timestamp():
+    started_at = time.time()     # a timestamp, never subtracted: fine
+    return {"started_at": started_at, "uptime": time.perf_counter()}

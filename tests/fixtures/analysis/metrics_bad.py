@@ -1,0 +1,11 @@
+"""Fixture: kind clash + mixed label schemas (3 findings expected)."""
+
+
+def install(reg):
+    reg.counter("requests_total", "requests")   # registered as counter...
+    reg.gauge("requests_total", "requests")     # ...and as gauge: clash
+    lat = reg.histogram("latency_seconds", "request latency")
+    lat.observe(0.1, route="generate")
+    lat.observe(0.2, route="generate")
+    lat.observe(0.3)                            # label schema mismatch
+    return lat

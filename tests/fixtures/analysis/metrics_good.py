@@ -1,0 +1,14 @@
+"""Fixture: hygienic metric usage — zero findings expected.
+
+Metric names are distinct from metrics_bad.py on purpose: the checker is
+project-wide, so shared names would couple the two fixtures.
+"""
+
+
+def install(reg):
+    req = reg.counter("fixture_ok_total", "requests")
+    req.inc(route="generate")
+    req.inc(route="health")
+    lat = reg.histogram("fixture_ok_seconds", "request latency")
+    lat.observe(0.1, route="generate")
+    return req, lat

@@ -1,0 +1,7 @@
+"""Fixture: shapes that cannot use the fused Pallas kernel (3 findings)."""
+
+TQ_SHAPE_PROBES = [
+    (4096, 14336, 32, "up"),     # strip blows the _TQ_STRIP_BYTES budget
+    (100, 64, 32, "up"),         # K not divisible by group
+    (14336, 4000, 32, "down"),   # N has no 128-divisible block
+]

@@ -1,0 +1,6 @@
+"""Fixture: shapes that fit the Pallas budget — zero findings expected."""
+
+TQ_SHAPE_PROBES = [
+    (2048, 2048, 32, "up"),
+    (5504, 2048, 32, "down"),
+]

@@ -1,0 +1,15 @@
+"""Fixture: PRNG key reuse + loop carry (2 findings expected)."""
+import jax
+
+
+def bad_reuse(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))   # same key, correlated streams
+    return a + b
+
+
+def bad_loop_carry(key):
+    total = 0.0
+    for _ in range(4):
+        total += jax.random.uniform(key)   # same stream every iteration
+    return total

@@ -1,0 +1,26 @@
+"""Fixture: correct key discipline — zero findings expected."""
+import jax
+
+
+def good_split(key):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, (4,))
+    key, sub = jax.random.split(key)
+    b = jax.random.normal(sub, (4,))
+    return a + b
+
+
+def good_presplit_loop(key, n):
+    ks = jax.random.split(key, n)
+    total = 0.0
+    for i in range(n):
+        total += jax.random.uniform(ks[i])
+    return total
+
+
+def good_fold_in_loop(key):
+    total = 0.0
+    for step in range(3):
+        k = jax.random.fold_in(key, step)
+        total += jax.random.uniform(k)
+    return total

@@ -1,0 +1,39 @@
+"""Fixture: jit-purity violations, one per flavour (5 findings expected)."""
+import time
+
+import jax
+
+STATS = []
+COUNT = 0
+
+
+@jax.jit
+def bad_clock(x):
+    t0 = time.time()          # trace-time constant
+    return x * t0
+
+
+@jax.jit
+def bad_print(x):
+    print("tracing", x)       # fires at trace time only
+    return x
+
+
+@jax.jit
+def bad_closure(x):
+    STATS.append(1)           # once per compile, not per call
+    return x
+
+
+@jax.jit
+def bad_global(x):
+    global COUNT              # rebinds at trace time
+    COUNT = COUNT + 1
+    return x
+
+
+@jax.jit
+def bad_branch(x, n):
+    if x > 0:                 # Python branch on a traced argument
+        return x + n
+    return x - n

@@ -1,0 +1,37 @@
+"""Fixture: jit-compatible equivalents — zero findings expected."""
+import functools
+
+import jax
+from jax import lax
+
+
+@jax.jit
+def good_pure(x):
+    return x * 2.0
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def good_static_branch(x, mode):
+    if mode == "up":          # static argument: host branching is fine
+        return x + 1.0
+    return x - 1.0
+
+
+@jax.jit
+def good_lax_branch(x):
+    return lax.cond(x.sum() > 0, lambda v: v + 1.0, lambda v: v - 1.0, x)
+
+
+@jax.jit
+def good_none_guard(x, bias=None):
+    if bias is None:          # `is None` compares are static
+        return x
+    return x + bias
+
+
+def good_debug(x):
+    jax.debug.print("x = {x}", x=x)
+    return x
+
+
+good_debug_jit = jax.jit(good_debug)

@@ -1,0 +1,217 @@
+"""Static-analysis pass: fixture corpus, baseline round-trip, suppression,
+and the Pallas-budget <-> runtime-guard regression pin."""
+import pathlib
+
+import pytest
+
+from repro.analysis import framework as fw
+from repro.analysis.cli import main as analysis_main
+from repro.analysis.pallas_budget import zoo_units
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+FIXTURES = HERE / "fixtures" / "analysis"
+
+EXPECTED_CHECKERS = {"jit-purity", "prng-discipline", "monotonic-clock",
+                     "pallas-budget", "metrics-hygiene"}
+
+
+def run(paths, select=None):
+    return fw.run_analysis([str(p) for p in paths], select=select,
+                           root=FIXTURES)
+
+
+def test_registry_has_all_checkers():
+    fw._load_default_checkers()
+    assert set(fw.CHECKERS) == EXPECTED_CHECKERS
+    for c in fw.CHECKERS.values():
+        assert c.description and c.bug_class
+
+
+# (rule, bad fixture, expected finding count, good fixture)
+CASES = [
+    ("jit-purity", "purity_bad.py", 5, "purity_good.py"),
+    ("prng-discipline", "prng_bad.py", 2, "prng_good.py"),
+    ("monotonic-clock", "clocks_bad.py", 2, "clocks_good.py"),
+    ("pallas-budget", "pallas_bad.py", 3, "pallas_good.py"),
+    ("metrics-hygiene", "metrics_bad.py", 3, "metrics_good.py"),
+]
+
+
+@pytest.mark.parametrize("rule,bad,n_bad,good", CASES,
+                         ids=[c[0] for c in CASES])
+def test_fixture_pair(rule, bad, n_bad, good):
+    rep = run([FIXTURES / bad], select=[rule])
+    assert len(rep.findings) == n_bad, [f.message for f in rep.findings]
+    assert all(f.rule == rule and f.path == bad for f in rep.findings)
+    rep = run([FIXTURES / good], select=[rule])
+    assert rep.findings == [], [f.message for f in rep.findings]
+
+
+def test_corpus_full_sweep_counts_by_rule():
+    """All checkers over the whole corpus: bad files produce exactly the
+    per-rule counts, good files produce nothing (cross-checker silence)."""
+    rep = run([FIXTURES])
+    by_rule = rep.to_json()["summary"]["by_rule"]
+    assert by_rule == {rule: n for rule, _, n, _ in CASES}
+    assert not any(f.path.endswith("_good.py") for f in rep.findings)
+    assert rep.suppressed == []
+
+
+def test_finding_messages_name_the_bug():
+    rep = run([FIXTURES / "purity_bad.py"], select=["jit-purity"])
+    msgs = "\n".join(f.message for f in rep.findings)
+    assert "trace-time constant" in msgs
+    assert "jax.debug.print" in msgs
+    assert "once per compile" in msgs
+    assert "lax.cond" in msgs
+    rep = run([FIXTURES / "pallas_bad.py"], select=["pallas-budget"])
+    msgs = "\n".join(f.message for f in rep.findings)
+    assert "_TQ_STRIP_BYTES" in msgs
+    assert "not divisible by group" in msgs
+    assert "no 128-divisible block" in msgs
+    # symbols anchor findings for baseline identity
+    rep = run([FIXTURES / "clocks_bad.py"], select=["monotonic-clock"])
+    assert sorted(f.symbol for f in rep.findings) == ["bad_alias",
+                                                      "bad_direct"]
+
+
+def test_skip_file_and_inline_suppression(tmp_path):
+    bad = ("import time\n\n\n"
+           "def f():\n"
+           "    t0 = time.time()\n"
+           "    return time.time() - t0\n")
+    mod = tmp_path / "mod.py"
+    mod.write_text("# analysis: skip-file\n" + bad)
+    rep = fw.run_analysis([str(mod)], root=tmp_path)
+    assert rep.findings == [] and rep.files == []
+    mod.write_text(bad.replace(
+        "return time.time() - t0",
+        "return time.time() - t0  # analysis: ignore[monotonic-clock]"))
+    rep = fw.run_analysis([str(mod)], root=tmp_path)
+    assert rep.findings == []
+    assert [f.rule for f in rep.suppressed] == ["monotonic-clock"]
+    # bare `ignore` (no rule list) silences every rule on the line
+    mod.write_text(bad.replace(
+        "return time.time() - t0",
+        "return time.time() - t0  # analysis: ignore"))
+    rep = fw.run_analysis([str(mod)], root=tmp_path)
+    assert rep.findings == [] and len(rep.suppressed) == 1
+
+
+def test_cli_baseline_roundtrip(tmp_path):
+    """add -> accept via --update-baseline -> clean; new finding fails;
+    suppressing the new finding passes again."""
+    mod = tmp_path / "mod.py"
+    mod.write_text("import time\n\n\n"
+                   "def f():\n"
+                   "    t0 = time.time()\n"
+                   "    return time.time() - t0\n")
+    base = tmp_path / "baseline.json"
+    argv = [str(mod), "--baseline", str(base), "--root", str(tmp_path)]
+    assert analysis_main(argv) == 1               # unbaselined: gate fails
+    assert analysis_main(argv + ["--update-baseline"]) == 0
+    assert analysis_main(argv) == 0               # accepted: gate passes
+    mod.write_text(mod.read_text() +
+                   "\n\ndef g():\n"
+                   "    t1 = time.time()\n"
+                   "    return time.time() - t1\n")
+    assert analysis_main(argv) == 1               # only the NEW one fails
+    mod.write_text(mod.read_text().replace(
+        "return time.time() - t1",
+        "return time.time() - t1  # analysis: ignore[monotonic-clock]"))
+    assert analysis_main(argv) == 0
+
+
+def test_baseline_survives_line_churn(tmp_path):
+    """Identity is (rule, path, symbol, message): edits above a baselined
+    finding must not trip the gate even though its line moved."""
+    mod = tmp_path / "mod.py"
+    body = ("import time\n\n\n"
+            "def f():\n"
+            "    t0 = time.time()\n"
+            "    return time.time() - t0\n")
+    mod.write_text(body)
+    base = tmp_path / "baseline.json"
+    argv = [str(mod), "--baseline", str(base), "--root", str(tmp_path)]
+    assert analysis_main(argv + ["--update-baseline"]) == 0
+    mod.write_text("# a comment pushing every line down\n\n\n" + body)
+    assert analysis_main(argv) == 0
+
+
+def test_cli_json_report_shape(tmp_path):
+    import json
+    mod = tmp_path / "mod.py"
+    mod.write_text("import time\n\n\n"
+                   "def f():\n"
+                   "    t0 = time.time()\n"
+                   "    return time.time() - t0\n")
+    out = tmp_path / "report.json"
+    rc = analysis_main([str(mod), "--baseline", "", "--root", str(tmp_path),
+                        "--json", str(out)])
+    assert rc == 1
+    rep = json.loads(out.read_text())
+    assert rep["version"] == fw.BASELINE_VERSION
+    assert rep["tool"] == "repro.analysis"
+    assert set(rep["checkers"]) == EXPECTED_CHECKERS
+    assert rep["summary"]["total"] == len(rep["findings"]) == 1
+    assert rep["summary"]["new"] == 1
+    assert rep["summary"]["by_rule"] == {"monotonic-clock": 1}
+    f = rep["findings"][0]
+    assert f["path"] == "mod.py" and f["symbol"] == "f" and f["line"] == 6
+
+
+def test_cli_select_unknown_checker_is_usage_error(tmp_path):
+    mod = tmp_path / "mod.py"
+    mod.write_text("x = 1\n")
+    rc = analysis_main([str(mod), "--root", str(tmp_path),
+                        "--select", "no-such-checker"])
+    assert rc == 2
+
+
+def test_pallas_budget_matches_runtime_guard():
+    """The lint-time verdict IS the runtime fallback decision: zoo_units()
+    must agree with ops.tq_plan for every (arch, projection) unit, and the
+    abstract eval through the real wrapper must hold the (K, N) contract."""
+    from repro.configs import get_config, list_archs
+    from repro.kernels import ops
+
+    rows = zoo_units()
+    archs = list_archs() + ["opt-1.3b"]
+    assert sorted({r["arch"] for r in rows}) == sorted(set(archs))
+    n_ffn = sum(1 for a in archs if get_config(a).d_ff)
+    checked = 0
+    for r in rows:
+        if r["proj"] is None:
+            continue  # pure-SSM arch: nothing to transform
+        plan = ops.tq_plan(r["K"], r["N"], group=r["group"], mode=r["mode"])
+        assert r["ok"] == plan.ok
+        assert r["strip_bytes"] == plan.strip_bytes
+        if plan.ok:
+            assert plan.strip_bytes <= ops._TQ_STRIP_BYTES
+        else:
+            assert r["reason"]
+        assert r["eval_shape"] is not None, "abstract eval must run under jax"
+        assert r["eval_shape"][0] == (r["K"], r["N"])
+        checked += 1
+    assert checked == 2 * n_ffn  # both projections of every FFN-bearing arch
+
+
+def test_committed_baseline_covers_zoo_fallbacks():
+    """Every not-ok zoo unit is a baselined pallas-budget finding (and
+    nothing else is): the committed baseline tracks the real fallback set."""
+    base = fw.load_baseline(REPO / "analysis_baseline.json")
+    pallas = [f for f in base if f.rule == "pallas-budget"]
+    bad_rows = [r for r in zoo_units() if r["proj"] and not r["ok"]]
+    assert len(pallas) == len(bad_rows) > 0
+    msgs = "\n".join(f.message for f in pallas)
+    for r in bad_rows:
+        assert f"config {r['arch']} ffn_{r['proj']} " in msgs, r["arch"]
+
+
+def test_repo_src_is_clean_against_committed_baseline():
+    """The CI gate itself: zero non-baselined findings on the tree."""
+    rc = analysis_main([str(REPO / "src"), "--baseline",
+                        str(REPO / "analysis_baseline.json"),
+                        "--root", str(REPO)])
+    assert rc == 0

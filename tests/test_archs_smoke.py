@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_config, list_archs
 from repro.launch.steps import make_train_step
-from repro.models import init_params, forward, lm_loss, init_cache, decode_step, prefill
+from repro.models import init_params, forward, init_cache, decode_step, prefill
 from repro.models.frontends import stub_vision_embeds, stub_audio_frames
 from repro.optim.adamw import AdamWConfig, adamw_init
 

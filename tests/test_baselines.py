@@ -3,7 +3,6 @@ metric it optimizes."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.quant import QuantConfig, fake_quant
 from repro.core.gptq import gptq_matrix

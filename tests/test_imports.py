@@ -10,7 +10,6 @@ import os
 import pkgutil
 
 import jax
-import pytest
 
 import repro
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.invariance import (FFNTransform, identity_transform,
@@ -50,7 +49,8 @@ def test_rotation_exact_for_linear_activation():
     t = FFNTransform(pi=jnp.arange(F, dtype=jnp.int32), s=jnp.ones((F,)),
                      phi=jax.random.normal(key, (F // 2,)) * 2.0)
     u, d, b, _, _ = apply_transform_ffn(t, wu, wd, bu)
-    ident = lambda v: v
+    def ident(v):
+        return v
     np.testing.assert_allclose(np.asarray(_ffn(x, u, d, b, act=ident)),
                                np.asarray(_ffn(x, wu, wd, bu, act=ident)),
                                rtol=1e-4, atol=1e-4)
@@ -95,7 +95,8 @@ def test_combined_psr_composition_order():
                      s=jnp.exp(jax.random.normal(ks[1], (F,)) * 0.3),
                      phi=jax.random.normal(ks[2], (F // 2,)))
     u, d, b, _, _ = apply_transform_ffn(t, wu, wd, bu)
-    ident = lambda v: v
+    def ident(v):
+        return v
     np.testing.assert_allclose(np.asarray(_ffn(x, u, d, b, act=ident)),
                                np.asarray(_ffn(x, wu, wd, bu, act=ident)),
                                rtol=2e-4, atol=2e-4)

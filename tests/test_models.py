@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models import init_params, forward, init_cache, decode_step, prefill
-from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models import init_params, forward, decode_step, prefill
+from repro.models.config import ModelConfig, MoEConfig
 from repro.models import layers as L
 
 

@@ -182,10 +182,19 @@ def test_trace_span_writes_jsonl_and_observes_hist():
             pass
         obs.emit("ev", _print=False, a=2)
     events = [json.loads(line) for line in buf.getvalue().splitlines()]
-    assert [e["ph"] for e in events] == ["B", "E", "i"]
-    assert events[0]["attrs"] == {"k": 1}
-    assert events[1]["dur_s"] == sp.dur and sp.dur >= 0.0
-    assert events[2]["a"] == 2
+    # every sink opens with the epoch anchor metadata event: event ts values
+    # are monotonically derived, the anchor maps them back to wall time
+    assert [e["ph"] for e in events] == ["M", "B", "E", "i"]
+    assert events[0]["name"] == "clock_anchor"
+    assert {"wall", "mono"} <= set(events[0])
+    assert events[1]["attrs"] == {"k": 1}
+    assert events[2]["dur_s"] == sp.dur and sp.dur >= 0.0
+    # E.ts is derived from B.ts + dur, so spans can never overlap/reorder
+    # under a wall-clock adjustment
+    # abs tolerance: double precision at epoch magnitude is ~1e-7 s
+    assert events[2]["ts"] - events[1]["ts"] == pytest.approx(sp.dur,
+                                                              abs=1e-5)
+    assert events[3]["a"] == 2
     assert h.count() == 1
     assert obs.get_trace_sink() is not buf    # trace_to restored the sink
 

@@ -298,8 +298,9 @@ def test_paged_prefill_matches_contiguous_scatter(page_size, plen, chunk_pages,
                           QuantConfig(bits=2, group_size=32))
     prompt = np.random.default_rng(plen).integers(
         0, cfg.vocab_size, size=plen).astype(np.int32)
-    mk = lambda: PagedKVCache(cfg, n_pages=16, page_size=page_size,
-                              max_pages_per_seq=8)
+    def mk():
+        return PagedKVCache(cfg, n_pages=16, page_size=page_size,
+                            max_pages_per_seq=8)
     # reference: the v1 admit path (contiguous prefill, then scatter)
     ref_cache = mk()
     n_pages = ref_cache.pages_for(plen)
@@ -336,8 +337,9 @@ def test_paged_prefill_int8_pool_matches_scatter():
                           QuantConfig(bits=2, group_size=32))
     prompt = np.random.default_rng(5).integers(
         0, cfg.vocab_size, size=11).astype(np.int32)
-    mk = lambda: PagedKVCache(cfg, n_pages=12, page_size=4,
-                              max_pages_per_seq=6)
+    def mk():
+        return PagedKVCache(cfg, n_pages=12, page_size=4,
+                            max_pages_per_seq=6)
     ref_cache, new_cache = mk(), mk()
     ids = ref_cache.allocator.alloc(ref_cache.pages_for(11))
     assert new_cache.allocator.alloc(len(ids)) == ids
@@ -685,7 +687,8 @@ def test_sample_logits_per_seq_matches_static():
 
 def _mixed_requests(cfg, seed=6):
     rng = np.random.default_rng(seed)
-    mk = lambda n: rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+    def mk(n):
+        return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
     return [
         PagedRequest(prompt=mk(5), max_new=5),                      # greedy
         PagedRequest(prompt=mk(9), max_new=5, temperature=0.9,

@@ -311,9 +311,10 @@ def test_slo_priority_admission_order(packed_tiny):
 def test_slo_tenant_quota_gates_admission(packed_tiny):
     cfg, params_q = packed_tiny
     rng = np.random.default_rng(29)
-    mk = lambda tenant: PagedRequest(
-        prompt=rng.integers(0, cfg.vocab_size, size=10).astype(np.int32),
-        max_new=2, tenant=tenant)
+    def mk(tenant):
+        return PagedRequest(
+            prompt=rng.integers(0, cfg.vocab_size, size=10).astype(np.int32),
+            max_new=2, tenant=tenant)
     a1, a2, b1 = mk("a"), mk("a"), mk("b")
     cache = PagedKVCache(cfg, n_pages=20, page_size=8, max_pages_per_seq=4)
     b = ContinuousBatcher(params_q, cfg, cache, max_batch=3,

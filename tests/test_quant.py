@@ -5,10 +5,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.quant import (QuantConfig, compute_qparams, quantize_codes,
-                              dequantize_codes, fake_quant, pack_codes,
-                              unpack_codes, quantize_tensor, bits_per_param,
-                              vals_per_word)
+from repro.core.quant import (QuantConfig, compute_qparams, fake_quant,
+                              pack_codes, unpack_codes, quantize_tensor,
+                              bits_per_param, vals_per_word)
 
 
 @pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])

@@ -1,9 +1,8 @@
 """Roofline analyzer logic: HLO collective parsing + extrapolation math."""
-import numpy as np
 import pytest
 
-from repro.launch.roofline import (collective_bytes, extrapolate, roofline_terms,
-                                   _type_bytes, HW)
+from repro.launch.roofline import (collective_bytes, extrapolate,
+                                   roofline_terms, _type_bytes)
 
 HLO_SAMPLE = """
 HloModule jit_step
@@ -35,7 +34,8 @@ def test_collective_bytes_parsing():
 
 def test_extrapolation_exact_for_linear():
     # cost(L) = 7 + 3L  ->  extrapolating from L=2,3 to 24 must be exact
-    f = lambda L: 7 + 3 * L
+    def f(L):
+        return 7 + 3 * L
     assert extrapolate(f(2), f(3), 2, 3, 24) == pytest.approx(f(24))
 
 

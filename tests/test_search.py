@@ -8,7 +8,6 @@ import pytest
 from repro.core.quant import QuantConfig
 from repro.core.search import (SearchConfig, run_search, DenseFFNAdapter,
                                MoEAdapter, make_adapter)
-from repro.core.invariance import ProposalConfig
 from repro.models import forward
 from repro.core.objective import calib_ce
 

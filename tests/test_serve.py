@@ -10,7 +10,7 @@ from repro.core.quant import QuantConfig
 from repro.core.rtn import rtn_quantize
 from repro.launch.serve import BatchedServer, PagedServer, Request
 from repro.models import init_params, forward
-from repro.quantized.qmodel import pack_model, packed_bytes, dense_bytes
+from repro.quantized.qmodel import pack_model
 
 
 @pytest.fixture(scope="module")

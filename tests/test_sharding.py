@@ -3,13 +3,11 @@ exercised by launch/dryrun.py, which is itself validated in CI via one cell)."""
 import types
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core.quant import QuantConfig, quantize_tensor
+from repro.core.quant import QuantConfig
 from repro.dist.sharding import ShardingRules, param_specs, opt_state_specs, cache_specs, data_spec
 from repro.launch.steps import param_structs, qparam_structs, input_specs, SHAPES, shape_applicable
 

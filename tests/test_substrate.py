@@ -1,6 +1,5 @@
 """Substrate: data determinism, AdamW, checkpointing, fault tolerance,
 compressed collectives."""
-import time
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ from repro.data.pipeline import DataConfig, make_pipeline, SyntheticZipf
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
                                clip_by_global_norm, cosine_schedule)
 from repro.ckpt.checkpoint import (CheckpointManager, save_checkpoint,
-                                   restore_checkpoint, latest_step)
+                                   restore_checkpoint)
 from repro.dist.fault import StepWatchdog, run_resilient
 from repro.core.quant import QuantConfig, quantize_tensor
 

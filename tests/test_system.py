@@ -1,9 +1,7 @@
 """End-to-end system test — the paper's central claim on a REAL (trained)
 model: 2-bit quantization wrecks perplexity; InvarExplore recovers a
 significant part of it ON TOP of the base method (Table 1 behaviour)."""
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.objective import calib_ce
