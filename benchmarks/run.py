@@ -17,13 +17,24 @@ def main() -> None:
                     help="fewer search steps (CI-speed run)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,table3,table4,"
-                         "fig1,kernels,serving")
+                         "fig1,kernels,serving,search")
     args = ap.parse_args()
     steps = 120 if args.fast else 400
 
     from benchmarks import (table1_main, table2_ablation, table3_bits,
                             table4_actmatch, fig1_curves, kernel_bench,
                             serving_bench)
+
+    def search_mem_bench():
+        # K=8 candidate eval, O(unit) dynamic-slice install vs K full stacks:
+        # search_unit_install/ and search_stack_install/ rows with
+        # peak_live_bytes (jax.live_arrays() delta) in BENCH_search.json
+        from repro.launch.search import run_search_bench
+        for mode in ("unit", "stack"):
+            run_search_bench(steps=4 if args.fast else 16, population=8,
+                             n_seqs=2, seq_len=64, install=mode,
+                             measure_mem=True)
+
     jobs = {
         "table1": lambda: table1_main.run(search_steps=steps),
         "table2": lambda: table2_ablation.run(search_steps=max(steps * 3 // 4, 80)),
@@ -32,6 +43,7 @@ def main() -> None:
         "fig1": lambda: fig1_curves.run(search_steps=steps),
         "kernels": kernel_bench.run,
         "serving": serving_bench.run,
+        "search": search_mem_bench,
     }
     only = set(args.only.split(",")) if args.only else set(jobs)
     t0 = time.time()

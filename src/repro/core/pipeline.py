@@ -22,7 +22,8 @@ from repro.core.rtn import map_quantizable
 from repro.core.awq import awq_process_dense
 from repro.core.gptq import gptq_process_dense
 from repro.core.omniquant import omniquant_process_dense
-from repro.core.search import SearchConfig, run_search, run_search_hybrid
+from repro.core.search import SearchConfig
+from repro.search.api import run as run_invar_search
 from repro.models.config import ModelConfig
 
 __all__ = ["quantize_model", "PTQResult"]
@@ -74,9 +75,9 @@ def quantize_model(
 
     # 3) InvarExplore search or plain FFN fake-quant
     if search is not None:
-        runner = run_search_hybrid if cfg.block_pattern == "hybrid" else run_search
-        result = runner(params_fp, params_base, cfg, qcfg, calib_tokens,
-                        search, forward_kwargs=forward_kwargs)
+        result = run_invar_search(params_fp, params_base, cfg, qcfg,
+                                  calib_tokens, search,
+                                  forward_kwargs=forward_kwargs)
         return PTQResult(result.params_q, method + "+invarexplore", result)
 
     params_q = map_quantizable(

@@ -18,7 +18,8 @@ zero extra communication.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +36,9 @@ __all__ = ["SearchConfig", "SearchResult", "DenseFFNAdapter", "MoEAdapter",
 class SearchConfig:
     steps: int = 2000
     seed: int = 0
-    objective: str = "ce"          # "ce" (Eqn. 23) | "kl" (Algorithm 1 listing)
+    # registry name ("ce" Eqn. 23 | "kl" Algorithm-1 listing | "swd_actmatch"
+    # | "saliency_ce") or a core.objective.Objective instance
+    objective: Any = "ce"
     n_match_layers: int = 10       # activation-matching depth (paper Table 4)
     ce_weight: float = 10.0        # CE is 10x more important at step 0 (§4.1)
     proposal: inv.ProposalConfig = dataclasses.field(default_factory=inv.ProposalConfig)
@@ -49,6 +52,14 @@ class SearchConfig:
     fused_kernel: bool = False     # kernels.transform_quant fused hot path
     mapped: bool = False           # one island per mesh shard (shard_map);
                                    # requires islands == global device count
+    # --- v2 candidate-eval memory model + calibration sharding ---
+    install: str = "unit"          # "unit": stack + K×unit dynamic-slice
+                                   # install; "stack": v1 K full stacks
+    tabu: int = 0                  # tried-point memory capacity (0 = off;
+                                   # sequential lane only)
+    shard_calib: bool = False      # per-island calibration slices
+    measure_memory: bool = False   # sample jax.live_arrays() peaks into
+                                   # stats["peak_live_bytes"] (slow; bench)
 
 
 @dataclasses.dataclass
@@ -314,32 +325,19 @@ def _merge_phase_stats(s1, s2):
 
 def run_search_hybrid(params_fp, params_base, cfg, qcfg, calib_tokens,
                       scfg: SearchConfig = SearchConfig(), forward_kwargs=None):
-    """Hybrid (Zamba2) InvarExplore: phase 1 hill-climbs the Mamba blocks'
-    within-head permutations; phase 2 hill-climbs the shared FFN's P/S/R,
-    starting from phase 1's quantized model. Phase 2 runs the REMAINDER
-    ``steps - steps // 2`` so an odd budget is spent in full, and the
-    returned histories/stats merge both phases."""
-    n1 = scfg.steps // 2
-    n2 = scfg.steps - n1
-    r1 = run_search(params_fp, params_base, cfg, qcfg, calib_tokens,
-                    dataclasses.replace(scfg, steps=n1),
-                    adapter=MambaAdapter(cfg), forward_kwargs=forward_kwargs)
-    r2 = run_search(params_fp, r1.params_q, cfg, qcfg, calib_tokens,
-                    dataclasses.replace(scfg, steps=n2),
-                    adapter=SharedFFNAdapter(cfg), forward_kwargs=forward_kwargs)
-    r2.history = r1.history + r2.history
-    r2.initial_loss = r1.initial_loss
-    r2.accept_rate = (r1.accept_rate * n1 + r2.accept_rate * n2) \
-        / max(scfg.steps, 1)
-    if r1.island_histories and r2.island_histories:
-        r2.island_histories = [h1 + h2 for h1, h2 in
-                               zip(r1.island_histories, r2.island_histories)]
-    r2.stats = _merge_phase_stats(r1.stats, r2.stats)
-    return r2
+    """Deprecated: ``repro.search.run`` dispatches hybrid block patterns to
+    the two-phase Mamba → shared-FFN composite automatically."""
+    warnings.warn(
+        "core.search.run_search_hybrid is deprecated; use "
+        "repro.search.run(...) (hybrid configs two-phase automatically)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search import run
+    return run(params_fp, params_base, cfg, qcfg, calib_tokens, scfg,
+               forward_kwargs=forward_kwargs, hybrid=True)
 
 
 # ---------------------------------------------------------------------------
-# The search entry point (Algorithm 1) — thin front-end over repro.search
+# The search entry point (Algorithm 1) — deprecated shim over repro.search
 # ---------------------------------------------------------------------------
 
 def run_search(
@@ -352,19 +350,19 @@ def run_search(
     adapter=None,
     forward_kwargs: Optional[dict] = None,
 ) -> SearchResult:
-    """params_fp: original FP model (reference H₀ / KL targets).
+    """Deprecated: call ``repro.search.run`` (same signature, one front door
+    for single-phase, hybrid and population/island configurations).
 
-    params_base: base-method-processed model — FFN weights are the
-    *dequantized-domain* weights the base PTQ method produced (AWQ-scaled,
-    GPTQ-compensated, or plain θ₀ for RTN); all OTHER quantizable weights must
-    already be fake-quantized (they stay fixed during the search).
-
-    The loop is ``repro.search.engine.run_population_search``; the default
-    ``SearchConfig`` (population=1, islands=1, temperature=0) reproduces the
-    original single-chain hill climb bit-for-bit.
+    This shim preserves the legacy single-phase semantics exactly — on a
+    hybrid config it searches only the Mamba blocks, as before (pass the
+    config to ``repro.search.run`` without an adapter to get the two-phase
+    composite instead). The default ``SearchConfig`` (population=1,
+    islands=1, temperature=0) reproduces the original single-chain hill
+    climb bit-for-bit.
     """
-    from repro.search.engine import run_population_search
-    return run_population_search(params_fp, params_base, cfg, qcfg,
-                                 calib_tokens, scfg,
-                                 adapter=adapter or make_adapter(cfg),
-                                 forward_kwargs=forward_kwargs)
+    warnings.warn(
+        "core.search.run_search is deprecated; use repro.search.run(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search import run
+    return run(params_fp, params_base, cfg, qcfg, calib_tokens, scfg,
+               adapter=adapter, forward_kwargs=forward_kwargs, hybrid=False)

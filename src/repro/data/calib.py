@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.data.pipeline import DataConfig, make_pipeline
 
-__all__ = ["calibration_tokens"]
+__all__ = ["calibration_tokens", "shard_calibration"]
 
 
 def calibration_tokens(vocab_size: int, n_seqs: int = 32, seq_len: int = 512,
@@ -16,3 +16,26 @@ def calibration_tokens(vocab_size: int, n_seqs: int = 32, seq_len: int = 512,
                      vocab_size=vocab_size)
     batch_at = make_pipeline(cfg, source=source)
     return batch_at(0)
+
+
+def shard_calibration(calib, n_islands: int):
+    """Per-island calibration slices (``SearchConfig(shard_calib=True)``):
+    contiguous equal batch slices, one per island, so each chain climbs on
+    its own data and islands exchange only objective estimates at migration.
+
+    ``n_islands == 1`` returns ``[calib]`` unchanged — the sharded lane is
+    then the replicated lane bit-for-bit (pinned by tests/test_search_v2.py).
+    Requires the batch to divide evenly: a ragged split would hand islands
+    different-shaped jitted programs AND different-sized loss estimates,
+    silently biasing migration races.
+    """
+    n = int(n_islands)
+    if n <= 1:
+        return [calib]
+    B = int(calib.shape[0])
+    if B % n != 0:
+        raise ValueError(
+            f"shard_calib needs the calibration batch ({B} seqs) to divide "
+            f"evenly over {n} islands; pad or trim the batch")
+    per = B // n
+    return [calib[i * per:(i + 1) * per] for i in range(n)]

@@ -44,8 +44,9 @@ def _check_mapped_parity(steps: int, migrate_every: int, population: int):
 
     from repro.configs import get_config
     from repro.core.quant import QuantConfig
-    from repro.core.search import SearchConfig, run_search
+    from repro.core.search import SearchConfig
     from repro.models import init_params
+    from repro.search import run as run_search
 
     cfg = get_config("opt-tiny").reduced(
         n_layers=2, d_model=64, d_ff=128, vocab_size=256, n_heads=4,

@@ -10,7 +10,10 @@ so CI accumulates a search-perf trajectory next to ``BENCH_kernels.json``.
 With ``--mapped`` the islands run one-per-device-shard
 (``SearchConfig(mapped=True)``; ``--islands`` must equal the device count)
 and the row lands under the ``search_mapped_islands/`` family — bench-smoke
-asserts both families are present.
+asserts both families are present. With ``--measure-mem`` the row carries
+``peak_live_bytes`` (the ``jax.live_arrays()`` delta over the run) and lands
+under ``search_unit_install/`` or ``search_stack_install/`` per
+``--install``, so CI can assert the O(unit) memory model at K=8.
 
 Configs are run in their ``.reduced()`` form: this driver is the
 CPU-container benchmark/smoke entry; the full-size configs are exercised
@@ -59,7 +62,9 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
                      population: int = 4, islands: int = 1,
                      temperature: float = 0.0, anneal: str = "geometric",
                      migrate_every: int = 25, fused: bool = False,
-                     mapped: bool = False,
+                     mapped: bool = False, objective: str = "ce",
+                     install: str = "unit", tabu: int = 0,
+                     shard_calib: bool = False, measure_mem: bool = False,
                      bits: int = 2, group: int = 32, n_seqs: int = 4,
                      seq_len: int = 128, seed: int = 0,
                      out: pathlib.Path = None,
@@ -79,7 +84,9 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
                         population=population, islands=islands,
                         temperature=temperature, anneal=anneal,
                         migrate_every=migrate_every, fused_kernel=fused,
-                        mapped=mapped)
+                        mapped=mapped, objective=objective, install=install,
+                        tabu=tabu, shard_calib=shard_calib,
+                        measure_memory=measure_mem)
     qcfg = QuantConfig(bits=bits, group_size=group)
 
     prop_before = obs.counter(
@@ -97,16 +104,32 @@ def run_search_bench(arch: str = "opt-tiny", *, steps: int = 40,
         raise AssertionError(
             f"obs/stats divergence: search_proposals_total grew by "
             f"{prop_delta} but stats['proposals'] == {proposals}")
-    family = "search_mapped_islands" if mapped else "search/engine"
+    if measure_mem:
+        # memory-model benchmark rows: bench-smoke asserts the unit-install
+        # peak live bytes stay below the K-full-stacks lane at the same K
+        family = ("search_unit_install" if install == "unit"
+                  else "search_stack_install")
+    elif mapped:
+        family = "search_mapped_islands"
+    else:
+        family = "search/engine"
     row = {
         "name": (f"{family}/{arch}s{steps}p{population}i{islands}"
-                 f"b{bits}g{group}" + ("fused" if fused else "")),
+                 f"b{bits}g{group}" + ("fused" if fused else "")
+                 + (f"-{objective}" if objective != "ce" else "")),
         "us_per_call": round(dt * 1e6 / max(proposals, 1), 1),
         "derived": (f"proposals_per_sec={proposals / max(dt, 1e-9):.2f} "
                     f"loss={sr.initial_loss:.4f}->{sr.final_loss:.4f} "
                     f"accept={sr.accept_rate:.2%} "
-                    f"migrations={sr.stats['migrations'] if sr.stats else 0}"),
+                    f"migrations={sr.stats['migrations'] if sr.stats else 0} "
+                    f"objective={sr.stats.get('objective', objective)} "
+                    f"install={sr.stats.get('install', install)} "
+                    f"tabu_hits={sr.stats.get('tabu_hits', 0)}"),
     }
+    if measure_mem and sr.stats and "peak_live_bytes" in sr.stats:
+        row["peak_live_bytes"] = int(sr.stats["peak_live_bytes"])
+        row["stack_bytes"] = int(sr.stats["stack_bytes"])
+        row["candidate_batch_bytes"] = int(sr.stats["candidate_batch_bytes"])
     print(f"{row['name']},{row['us_per_call']},{row['derived']}")
     out = pathlib.Path(out) if out else ART / "BENCH_search.json"
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -130,6 +153,19 @@ def main(argv=None) -> int:
     ap.add_argument("--mapped", action="store_true",
                     help="one island per mesh shard (requires --islands == "
                          "device count; see README 'Multi-host')")
+    ap.add_argument("--objective", default="ce",
+                    choices=["ce", "kl", "swd_actmatch", "saliency_ce"],
+                    help="search objective (registry name)")
+    ap.add_argument("--install", default="unit", choices=["unit", "stack"],
+                    help="candidate install mode: 'unit' = stack + K x unit "
+                         "dynamic-slice buffers; 'stack' = K full stacks")
+    ap.add_argument("--tabu", type=int, default=0,
+                    help="tried-point memory capacity (0 disables)")
+    ap.add_argument("--shard-calib", action="store_true",
+                    help="each island climbs on its own calibration slice")
+    ap.add_argument("--measure-mem", action="store_true",
+                    help="sample jax.live_arrays() peaks; rows land under "
+                         "search_unit_install/search_stack_install")
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--group", type=int, default=32)
     ap.add_argument("--seqs", type=int, default=4)
@@ -146,7 +182,10 @@ def main(argv=None) -> int:
     run_search_bench(args.arch, steps=args.steps, population=args.population,
                      islands=args.islands, temperature=args.temperature,
                      anneal=args.anneal, migrate_every=args.migrate_every,
-                     fused=args.fused, mapped=args.mapped, bits=args.bits,
+                     fused=args.fused, mapped=args.mapped,
+                     objective=args.objective, install=args.install,
+                     tabu=args.tabu, shard_calib=args.shard_calib,
+                     measure_mem=args.measure_mem, bits=args.bits,
                      group=args.group, n_seqs=args.seqs,
                      seq_len=args.seq_len, seed=args.seed, out=args.out,
                      metrics_out=args.metrics_out)

@@ -3,35 +3,52 @@
 One engine, three nested degrees of freedom, each defaulting to the paper's
 single-chain hill climb:
 
-- population K: K candidate transforms for the step's unit, evaluated in ONE
-  vmap-batched transform→fake-quant→forward→loss program (the calibration
-  forward is amortized K ways); the per-step move is the argmin candidate.
+- population K: K candidate transforms for the step's unit. v2 memory model
+  (``SearchConfig(install="unit")``, the default): the engine carries ONE
+  fake-quant stack plus a K × *unit* candidate buffer and installs only the
+  touched unit per evaluation via ``jax.lax.dynamic_update_slice`` tree
+  surgery (``repro.search.install``) — peak memory is stack + K × unit.
+  ``install="stack"`` keeps the v1 semantics (K full stacks through one
+  ``vmap``-batched program) for A/B benchmarking.
 - temperature T: Metropolis acceptance of the chosen candidate under an
   annealing schedule; T=0 is the strict accept-iff-better rule.
 - islands: independent chains with per-island counter-based key streams and
-  elite migration on a fixed cadence (``repro.search.islands``).
+  elite migration on a fixed cadence (``repro.search.islands``). With
+  ``shard_calib=True`` each island climbs on its OWN contiguous slice of the
+  calibration batch (``data.calib.shard_calibration``) — true data-parallel
+  calibration; islands exchange only scalar objective estimates at
+  migration.
 
-Bit-for-bit contract: at ``population=1, islands=1, temperature=0`` the
-engine's proposal keys, unit picks, jitted programs and accept decisions are
-EXACTLY the legacy ``core/search.py`` loop's, so the accepted-move trajectory
+The objective is pluggable (``core.objective``): ``SearchConfig.objective``
+takes a registry name ("ce", "kl", "swd_actmatch", "saliency_ce") or an
+``Objective`` instance; the engine combines ``(primary, aux)`` as
+``loss = primary + α · aux`` with α resolved from the step-0 full-batch
+values. A tried-point tabu memory (``SearchConfig(tabu=N)``,
+``repro.search.tabu``) replays cached scalars for proposals already
+evaluated at the current chain state instead of paying the device forward.
+
+Bit-for-bit contract: at ``population=1, islands=1, temperature=0`` under
+the default objective (tabu off, calibration replicated) the engine's
+proposal keys, unit picks, jitted programs and accept decisions are EXACTLY
+the legacy ``core/search.py`` loop's, so the accepted-move trajectory
 reproduces the paper configuration unchanged (pinned by
-``tests/test_search_engine.py``).
+``tests/test_search_engine.py``, now through the ``repro.search.run`` front
+door).
 
 Execution modes:
 
 - sequential (default): islands run one after another in-process — the
   reference semantics, and the only mode a 1-device host can run.
 - ``mapped=True``: one island per shard of a 1-D ("data",) mesh over ALL
-  global devices, stepped inside ``shard_map``. Every process replays every
-  island's HOST streams (unit picks, accept draws — cheap scalars), so the
-  accept logic stays on the host exactly as in sequential mode; only the
-  expensive proposal evaluation runs on-device, one island per shard, and
-  the per-migration traffic is one scalar ``argmin_allgather`` plus the
-  winner's state via ``elite_broadcast``. The mapped trajectory is pinned
-  BIT-FOR-BIT equal to the sequential island loop on a 1-host multi-device
-  mesh (``tests/test_search_mapped.py``), and the same code runs unchanged
-  under a real multi-process ``jax.distributed`` mesh (the CI ``distributed``
-  lane drives 2 processes through ``repro.launch.dist_smoke``).
+  global devices. Every process replays every island's HOST streams (unit
+  picks, accept draws — cheap scalars), so the accept logic stays on the
+  host exactly as in sequential mode; only the expensive proposal
+  evaluation runs on-device, one island per shard, and the per-migration
+  traffic is one scalar ``argmin_allgather`` plus the winner's state via
+  ``elite_broadcast``. The mapped trajectory is pinned BIT-FOR-BIT equal to
+  the sequential island loop because both lanes call the SAME per-island
+  step programs (the CI ``distributed`` lane drives 2 real processes
+  through ``repro.launch.dist_smoke``).
 """
 from __future__ import annotations
 
@@ -47,9 +64,12 @@ from repro.core import invariance as inv
 from repro.core import objective as obj
 from repro.models.model import forward
 from repro.search import anneal
+from repro.search.install import (stack_unit_batch, tree_bytes,
+                                  tree_install_unit)
 from repro.search.islands import (IslandState, make_island_streams, migrate,
                                   migrate_on_mesh)
 from repro.search.population import candidate_keys, stack_trees, take_tree
+from repro.search.tabu import TabuMemory, transform_bytes
 
 __all__ = ["run_population_search"]
 
@@ -68,6 +88,9 @@ def _search_metrics():
             "Accepted strictly-worse (uphill) moves"),
         "migrations": reg.counter(
             "search_migrations_total", "Elite island migrations applied"),
+        "tabu": reg.counter(
+            "search_tabu_hits_total",
+            "Proposals deduplicated by the tried-point memory"),
         "best": reg.gauge(
             "search_objective_best", "Best combined objective seen so far"),
         "temp": reg.gauge(
@@ -88,7 +111,41 @@ def _tree_update(tree, i, new):
     return jax.tree.map(lambda x, n: x.at[i].set(n), tree, new)
 
 
+def _live_bytes() -> int:
+    return int(sum(getattr(a, "nbytes", 0) for a in jax.live_arrays()))
+
+
+def _resolve_install(scfg) -> str:
+    mode = str(getattr(scfg, "install", "unit"))
+    if mode not in ("unit", "stack"):
+        raise ValueError(
+            f"SearchConfig.install must be 'unit' or 'stack', got {mode!r}")
+    return mode
+
+
 def run_population_search(
+    params_fp: dict,
+    params_base: dict,
+    cfg,
+    qcfg,
+    calib_tokens: jnp.ndarray,
+    scfg,
+    adapter,
+    forward_kwargs: Optional[dict] = None,
+):
+    """Deprecated alias of the engine loop — call ``repro.search.run``.
+
+    Kept as a thin shim so pre-v2 callers keep working; the front door adds
+    objective resolution and hybrid two-phase dispatch on top of this loop.
+    """
+    warnings.warn(
+        "repro.search.engine.run_population_search is deprecated; use "
+        "repro.search.run(...)", DeprecationWarning, stacklevel=2)
+    return _run_engine(params_fp, params_base, cfg, qcfg, calib_tokens,
+                       scfg, adapter, forward_kwargs)
+
+
+def _run_engine(
     params_fp: dict,
     params_base: dict,
     cfg,
@@ -105,6 +162,7 @@ def run_population_search(
     with everything else already fake-quantized).
     """
     from repro.core.search import SearchResult  # front-end owns the dataclass
+    from repro.data.calib import shard_calibration
 
     fwd_kw = forward_kwargs or {}
     n_match = min(scfg.n_match_layers, cfg.n_layers)
@@ -113,12 +171,22 @@ def run_population_search(
     migrate_every = int(getattr(scfg, "migrate_every", 0))
     mapped = bool(getattr(scfg, "mapped", False))
     fused = bool(getattr(scfg, "fused_kernel", False))
+    install_mode = _resolve_install(scfg)
+    tabu_cap = int(getattr(scfg, "tabu", 0))
+    shard_calib = bool(getattr(scfg, "shard_calib", False))
+    measure = bool(getattr(scfg, "measure_memory", False))
+    objv = obj.get_objective(getattr(scfg, "objective", "ce"))
     if fused and not hasattr(adapter, "transform_quant_unit"):
         warnings.warn(
             f"fused_kernel=True but adapter {type(adapter).__name__} has no "
             f"transform_quant_unit; falling back to the unfused "
             f"transform->quantize path", stacklevel=2)
         fused = False
+    if tabu_cap and mapped:
+        raise ValueError(
+            "tabu memory needs the host-synchronous sequential lane "
+            "(candidate fingerprints are host state); mapped=True cannot "
+            "combine with tabu>0")
 
     base = adapter.base_stack(params_base)
     proposer = getattr(adapter, "propose", None) or (
@@ -131,97 +199,220 @@ def run_population_search(
         lambda x: jnp.broadcast_to(x, (adapter.n_units,) + x.shape).copy(), t0)
     fq0 = jax.vmap(lambda b: adapter.quant_unit(b, qcfg))(base)
 
-    # reference forward (FP model)
+    # reference forward (FP model) on the FULL calibration batch; per-island
+    # slices view into these (batch axis 0 for tokens/logits, axis 1 for the
+    # (L, B, S, D) hidden taps)
     logits_fp, hidden_fp = forward(params_fp, cfg, calib_tokens,
                                    collect_hidden=True, **fwd_kw)
     hidden_fp = jax.lax.stop_gradient(hidden_fp[:n_match]) if n_match else None
     logits_fp = jax.lax.stop_gradient(logits_fp)
 
-    # everything the proposal evaluation reads besides per-island state; the
-    # mapped mode ships this tree to the global mesh replicated, the
-    # sequential mode closes over it exactly as the legacy loop did
-    env = {"base": base, "params_base": params_base, "calib": calib_tokens,
-           "logits_fp": logits_fp, "hidden_fp": hidden_fp}
+    def make_env(tokens, lfp, hfp):
+        return obj.ObjectiveEnv(calib=tokens, logits_fp=lfp, hidden_fp=hfp,
+                                vocab_size=cfg.vocab_size, n_match=n_match,
+                                ce_weight=scfg.ce_weight)
 
-    def eval_stack_fn(fq, env):
-        params_q = adapter.install(env["params_base"], fq)
-        logits, hidden = forward(params_q, cfg, env["calib"],
-                                 collect_hidden=True, **fwd_kw)
-        if scfg.objective == "kl":
-            ce = obj.calib_kl(logits, env["logits_fp"], cfg.vocab_size)
-        else:
-            ce = obj.calib_ce(logits, env["calib"], cfg.vocab_size)
-        mse = (obj.activation_mse(hidden, env["hidden_fp"], n_match)
-               if n_match else jnp.float32(0.0))
-        return ce, mse
+    env_global = make_env(calib_tokens, logits_fp, hidden_fp)
+    if shard_calib:
+        slices = shard_calibration(calib_tokens, n_islands)
+        bounds = np.cumsum([0] + [int(s.shape[0]) for s in slices])
+        envs = [make_env(slices[i],
+                         logits_fp[bounds[i]:bounds[i + 1]],
+                         (hidden_fp[:, bounds[i]:bounds[i + 1]]
+                          if n_match else None))
+                for i in range(n_islands)]
+    else:
+        envs = [env_global] * n_islands
 
-    eval_stack = jax.jit(lambda fq: eval_stack_fn(fq, env))
+    def make_eval(env):
+        state = objv.prepare(env)
 
-    ce0, mse0 = map(float, eval_stack(fq0))
-    alpha = obj.resolve_alpha(ce0, mse0, scfg.ce_weight) if n_match else 0.0
-    loss0 = ce0 + alpha * float(mse0)
+        def eval_stack_fn(fq):
+            params_q = adapter.install(params_base, fq)
+            logits, hidden = forward(params_q, cfg, env.calib,
+                                     collect_hidden=True, **fwd_kw)
+            return objv.evaluate(logits, hidden, state, env)
 
-    def quant_candidate(t_new, u, env):
+        return eval_stack_fn
+
+    eval_global = make_eval(env_global)
+    p0, a0 = map(float, jax.jit(eval_global)(fq0))
+    alpha = float(objv.resolve_mix(p0, a0, env_global))
+    loss0 = p0 + alpha * a0
+
+    def quant_candidate(t_new, u):
         if fused:
-            return adapter.transform_quant_unit(env["base"], t_new, u, qcfg)
-        unit = adapter.transform_unit(env["base"], t_new, u)
+            return adapter.transform_quant_unit(base, t_new, u, qcfg)
+        unit = adapter.transform_unit(base, t_new, u)
         return adapter.quant_unit(unit, qcfg)
 
-    def step_body_single(key, transforms, fq_stack, u, env):
-        # EXACTLY the legacy step: one proposal, unbatched evaluation — keeps
-        # the K=1 trajectory bit-identical to the original hill climb.
-        k_prop, _ = jax.random.split(key)
-        t_u = _tree_slice(transforms, u)
-        t_new = proposer(k_prop, inv.FFNTransform(*t_u), scfg.proposal)
-        unit = adapter.transform_unit(env["base"], t_new, u)
-        unit_fq = adapter.quant_unit(unit, qcfg)
-        fq_new = _tree_update(fq_stack, u, unit_fq)
-        ce, mse = eval_stack_fn(fq_new, env)
-        loss = ce + alpha * mse
-        return loss, ce, mse, fq_new, t_new
+    # ---- per-island step programs ----------------------------------------
+    # legacy single path: EXACTLY the pre-engine step — one proposal,
+    # unbatched evaluation in ONE jitted program. This is the bit-for-bit
+    # anchor; any K>1 / fused / tabu request takes the staged v2 pipeline.
+    staged = (K > 1) or fused or (tabu_cap > 0)
+    peak = {"bytes": 0, "batch_bytes": 0}
 
-    def step_body_population(key, transforms, fq_stack, u, env):
+    def make_single_step(eval_stack_fn):
+        def step_body_single(key, transforms, fq_stack, u):
+            k_prop, _ = jax.random.split(key)
+            t_u = _tree_slice(transforms, u)
+            t_new = proposer(k_prop, inv.FFNTransform(*t_u), scfg.proposal)
+            unit = adapter.transform_unit(base, t_new, u)
+            unit_fq = adapter.quant_unit(unit, qcfg)
+            fq_new = _tree_update(fq_stack, u, unit_fq)
+            p, a = eval_stack_fn(fq_new)
+            loss = p + alpha * a
+            return loss, p, a, fq_new, t_new
+
+        return jax.jit(step_body_single)
+
+    # staged v2 pipeline: propose / build / eval / pick are SEPARATE jitted
+    # stages so the K-candidate buffer is a real set of device arrays between
+    # stages — ``jax.live_arrays()`` then measures the memory model honestly
+    # (stack + K × unit for install="unit", (K+1) × stack for "stack").
+    def propose_body(key, transforms, u):
         keys = candidate_keys(key, K)
         t_u = inv.FFNTransform(*_tree_slice(transforms, u))
         cands = [proposer(keys[i], t_u, scfg.proposal) for i in range(K)]
-        fq_news = [_tree_update(fq_stack, u, quant_candidate(t, u, env))
-                   for t in cands]
-        fq_batch = stack_trees(fq_news)          # (K, n_units, ...)
-        ce, mse = jax.vmap(lambda fq: eval_stack_fn(fq, env))(fq_batch)
-        loss = ce + alpha * mse                  # ONE batched forward above
-        i = jnp.argmin(loss)
-        return (loss[i], ce[i], mse[i], take_tree(fq_batch, i),
-                take_tree(stack_trees(cands), i))
+        return stack_trees(cands)
 
-    step_body = (step_body_single if (K == 1 and not fused)
-                 else step_body_population)
+    propose_fn = jax.jit(propose_body)
+
+    def build_units_body(cands, u):
+        units = [quant_candidate(inv.FFNTransform(*_tree_slice(cands, i)), u)
+                 for i in range(K)]
+        return stack_unit_batch(units)
+
+    def build_stacks_body(cands, fq_stack, u):
+        units = [quant_candidate(inv.FFNTransform(*_tree_slice(cands, i)), u)
+                 for i in range(K)]
+        return stack_trees([tree_install_unit(fq_stack, u, un)
+                            for un in units])
+
+    build_units_fn = jax.jit(build_units_body)
+    build_stacks_fn = jax.jit(build_stacks_body)
+
+    def make_staged_step(eval_stack_fn):
+        if install_mode == "unit":
+            def eval_body(batch, fq_stack, u):
+                def body(unit_fq):
+                    return eval_stack_fn(
+                        tree_install_unit(fq_stack, u, unit_fq))
+                return jax.lax.map(body, batch)
+
+            def pick_body(cands, batch, fq_stack, u, p_vec, a_vec):
+                loss = p_vec + alpha * a_vec
+                i = jnp.argmin(loss)
+                fq_new = tree_install_unit(fq_stack, u, take_tree(batch, i))
+                return (loss[i], p_vec[i], a_vec[i], fq_new,
+                        inv.FFNTransform(*_tree_slice(cands, i)), loss)
+        else:
+            def eval_body(batch, fq_stack, u):
+                del fq_stack, u
+                return jax.vmap(eval_stack_fn)(batch)
+
+            def pick_body(cands, batch, fq_stack, u, p_vec, a_vec):
+                del fq_stack, u
+                loss = p_vec + alpha * a_vec
+                i = jnp.argmin(loss)
+                return (loss[i], p_vec[i], a_vec[i], take_tree(batch, i),
+                        inv.FFNTransform(*_tree_slice(cands, i)), loss)
+
+        eval_fn = jax.jit(eval_body)
+        pick_fn = jax.jit(pick_body)
+
+        def step(key, transforms, fq_stack, u):
+            cands = propose_fn(key, transforms, u)
+            if install_mode == "unit":
+                batch = build_units_fn(cands, u)
+            else:
+                batch = build_stacks_fn(cands, fq_stack, u)
+            if measure:
+                jax.block_until_ready(batch)
+                peak["bytes"] = max(peak["bytes"], _live_bytes())
+                peak["batch_bytes"] = max(peak["batch_bytes"],
+                                          tree_bytes(batch))
+            p_vec, a_vec = eval_fn(batch, fq_stack, u)
+            out = pick_fn(cands, batch, fq_stack, u, p_vec, a_vec)
+            return out[:5] + (out[5], p_vec, a_vec)
+
+        return step
+
+    def make_step_fn(eval_stack_fn):
+        """Host-callable step: (key, transforms, fq_stack, u) ->
+        (loss, primary, aux, fq_new, t_new[, cands, loss_vec])."""
+        if staged:
+            return make_staged_step(eval_stack_fn)
+        single = make_single_step(eval_stack_fn)
+
+        def step(key, transforms, fq_stack, u):
+            return single(key, transforms, fq_stack, u)
+
+        return step
+
+    eval_fns = ([make_eval(e) for e in envs] if shard_calib
+                else [eval_global] * n_islands)
+    if shard_calib:
+        step_fns = [make_step_fn(f) for f in eval_fns]
+        # per-island step-0 baselines on each island's OWN slice (1 island
+        # == the full batch == bitwise the replicated baseline)
+        loss0s, p0s, a0s = [], [], []
+        for f in eval_fns:
+            pi0, ai0 = map(float, jax.jit(f)(fq0))
+            p0s.append(pi0)
+            a0s.append(ai0)
+            loss0s.append(pi0 + alpha * ai0)
+    else:
+        shared = make_step_fn(eval_global)
+        step_fns = [shared] * n_islands
+        loss0s = [loss0] * n_islands
+        p0s = [p0] * n_islands
+        a0s = [a0] * n_islands
+
     schedule = anneal.temperature_schedule(
         getattr(scfg, "anneal", "geometric"),
         float(getattr(scfg, "temperature", 0.0)), scfg.steps)
 
     stats = {"migrations": 0, "uphill_accepts": 0,
              "proposals": scfg.steps * K * n_islands, "fused": fused,
-             "mapped": mapped}
+             "mapped": mapped, "objective": objv.name,
+             "install": install_mode, "tabu_hits": 0,
+             "shard_calib": shard_calib}
     metrics = _search_metrics()
     metrics["best"].set(loss0)
 
     if mapped:
         return _run_mapped_islands(
-            SearchResult, adapter, scfg, env, step_body, schedule, stats,
-            transforms0, fq0, loss0, ce0, mse0, n_islands, migrate_every,
-            metrics)
+            SearchResult, adapter, scfg, params_base, step_fns, schedule,
+            stats, transforms0, fq0, loss0s, p0s, a0s, n_islands,
+            migrate_every, metrics, objv.name)
 
-    step_fn = jax.jit(
-        lambda key, transforms, fq_stack, u:
-            step_body(key, transforms, fq_stack, u, env))
+    if measure:
+        baseline = _live_bytes()
+        peak["bytes"] = baseline
 
     islands = []
+    tabus = []
     for i in range(n_islands):
         rng, key = make_island_streams(scfg.seed, i)
         islands.append(IslandState(
             index=i, rng=rng, key=key, transforms=transforms0, fq_stack=fq0,
-            current_loss=loss0, best_loss=loss0, best_transforms=transforms0,
-            best_fq=fq0, history=[(0, loss0, ce0, float(mse0), True)]))
+            current_loss=loss0s[i], best_loss=loss0s[i],
+            best_transforms=transforms0, best_fq=fq0,
+            history=[(0, loss0s[i], p0s[i], a0s[i], True)]))
+        tabus.append(TabuMemory(tabu_cap) if tabu_cap else None)
+
+    # on a full-K tabu hit the device eval is skipped; if the Metropolis rule
+    # then ACCEPTS a cached (previously rejected, T>0) move, only its unit is
+    # rebuilt and installed — one quant, no calibration forward
+    def rebuild_body(cands, fq_stack, u, i):
+        t_new = inv.FFNTransform(*_tree_slice(cands, i))
+        fq_new = tree_install_unit(fq_stack, u,
+                                   quant_candidate(t_new, u))
+        return fq_new, t_new
+
+    rebuild_fn = jax.jit(rebuild_body)
 
     with obs.trace_span("search.run", mode="sequential",
                         islands=n_islands, population=K) as run_span:
@@ -230,18 +421,60 @@ def run_population_search(
             with obs.trace_span("search.step", step=step,
                                 hist=metrics["step"]):
                 for isl in islands:
+                    mem = tabus[isl.index]
                     isl.key, sub = jax.random.split(isl.key)
                     u = jnp.int32(isl.rng.integers(adapter.n_units))
+                    skipped = False
+                    cands = fps = None
+                    if mem is not None:
+                        cands = propose_fn(sub, isl.transforms, u)
+                        cand_bytes = [
+                            transform_bytes(_tree_slice(cands, i))
+                            for i in range(K)]
+                        fps = [mem.fingerprint(int(u), cb)
+                               for cb in cand_bytes]
+                        hits_before = mem.hits
+                        cached = [mem.lookup(fp) for fp in fps]
+                        new_hits = mem.hits - hits_before
+                        if new_hits:
+                            stats["tabu_hits"] += new_hits
+                            metrics["tabu"].inc(new_hits)
+                        skipped = all(c is not None for c in cached)
                     with obs.trace_span("search.eval",
                                         hist=metrics["eval"]):
-                        loss, ce, mse, fq_new, t_new = step_fn(
-                            sub, isl.transforms, isl.fq_stack, u)
-                        loss = float(loss)   # the device sync
-                    metrics["proposals"].inc(K)
+                        if skipped:
+                            # replay: no device eval, no extra PRNG draw
+                            # (the step key was spent proposing, exactly as
+                            # on the eval path)
+                            ci = int(np.argmin([c[0] for c in cached]))
+                            loss, p, a = cached[ci]
+                            fq_new = t_new = None
+                        else:
+                            out = step_fns[isl.index](
+                                sub, isl.transforms, isl.fq_stack, u)
+                            loss, p, a, fq_new, t_new = out[:5]
+                            loss = float(loss)   # the device sync
+                            if mem is not None:
+                                # cache every candidate's device-computed
+                                # scalars for exact replay on a later hit
+                                loss_vec = np.asarray(out[5], np.float32)
+                                p_vec = np.asarray(out[6], np.float32)
+                                a_vec = np.asarray(out[7], np.float32)
+                                for i in range(K):
+                                    mem.record(fps[i], float(loss_vec[i]),
+                                               float(p_vec[i]),
+                                               float(a_vec[i]))
+                            if measure:
+                                peak["bytes"] = max(peak["bytes"],
+                                                    _live_bytes())
+                    metrics["proposals"].inc(K, objective=objv.name)
                     delta = loss - isl.current_loss
                     uniform = isl.rng.random() if T > 0.0 else None
                     accepted = anneal.accept(delta, T, uniform)
                     if accepted:
+                        if skipped:
+                            fq_new, t_new = rebuild_fn(
+                                cands, isl.fq_stack, u, jnp.int32(ci))
                         # strictly-worse moves only (delta == 0 is lateral,
                         # not uphill), counted as a Python int — not an
                         # accumulated numpy bool
@@ -254,17 +487,31 @@ def run_population_search(
                         isl.transforms = _tree_update(isl.transforms, u,
                                                       t_new)
                         isl.n_accept += 1
+                        if mem is not None:
+                            idx = ci if skipped else None
+                            if idx is None:
+                                # which candidate won? match by bytes
+                                tb = transform_bytes(t_new)
+                                idx = cand_bytes.index(tb)
+                            mem.advance(cand_bytes[idx])
                         if loss < isl.best_loss:
                             isl.best_loss = loss
                             isl.best_transforms = isl.transforms
                             isl.best_fq = isl.fq_stack
                     isl.history.append(
-                        (step, loss, float(ce), float(mse), accepted))
+                        (step, loss, float(p), float(a), accepted))
                 if migrate_every and n_islands > 1 \
                         and step % migrate_every == 0:
+                    if tabu_cap:
+                        src = min(islands, key=lambda s: s.best_loss)
+                        dst = max(islands, key=lambda s: s.current_loss)
+                        will = (src is not dst
+                                and src.best_loss < dst.current_loss)
                     n_migrated = migrate(islands)
                     stats["migrations"] += n_migrated
                     metrics["migrations"].inc(n_migrated)
+                    if tabu_cap and n_migrated and will:
+                        tabus[dst.index].adopt_digest(tabus[src.index])
             metrics["best"].set(min(s.best_loss for s in islands))
             metrics["temp"].set(T)
             if scfg.log_every and step % scfg.log_every == 0:
@@ -277,13 +524,17 @@ def run_population_search(
     elite = min(islands, key=lambda s: s.best_loss)
     # monotonic clock (run_span.dur): wall time steps backwards under NTP
     stats["proposals_per_sec"] = stats["proposals"] / max(run_span.dur, 1e-9)
+    if measure:
+        stats["peak_live_bytes"] = max(peak["bytes"] - baseline, 0)
+        stats["stack_bytes"] = tree_bytes(fq0)
+        stats["candidate_batch_bytes"] = peak["batch_bytes"]
     return SearchResult(
         params_q=adapter.install(params_base, elite.best_fq),
         transforms=elite.best_transforms,
         history=elite.history,
         accept_rate=elite.n_accept / max(scfg.steps, 1),
         final_loss=elite.best_loss,
-        initial_loss=loss0,
+        initial_loss=loss0s[elite.index],
         island_histories=[s.history for s in islands],
         stats=stats,
     )
@@ -293,17 +544,18 @@ def run_population_search(
 # mapped mode: one island per shard of the ("data",) mesh
 # ---------------------------------------------------------------------------
 
-def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
-                        stats, transforms0, fq0, loss0, ce0, mse0,
-                        n_islands, migrate_every, metrics):
+def _run_mapped_islands(SearchResult, adapter, scfg, params_base, step_fns,
+                        schedule, stats, transforms0, fq0, loss0s, p0s, a0s,
+                        n_islands, migrate_every, metrics, obj_name):
     """The mapped island loop: one island per shard of the ("data",) mesh.
 
     Split of responsibilities, chosen so "bit-for-bit equal to sequential"
     is a property of the construction rather than a hope about the compiler:
 
     - the per-island STEP (propose → transform → fake-quant → forward → loss)
-      runs the SAME ``jax.jit(step_body)`` program the sequential engine
-      runs, with the island's state committed to its shard's device — XLA
+      runs the SAME per-island step program the sequential engine runs (the
+      legacy single-jit body, or the staged v2 propose/build/eval/pick
+      stages), with the island's state committed to its shard's device — XLA
       generates identical code for identical programs, so the per-step
       scalars come out bit-identical island by island. (Running the step
       *inside* shard_map instead was measurably NOT bit-stable: the
@@ -311,14 +563,18 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
       reductions, and ``optimization_barrier`` does not fence it off.)
     - everything CROSS-island runs inside ``shard_map`` over the island axis
       and is pure data movement, which is exact: the per-step scalar
-      exchange (an all-gather of each shard's (loss, ce, mse) row), and the
-      per-migration elite exchange — ``argmin_allgather`` for the scalar
+      exchange (an all-gather of each shard's (loss, primary, aux) row), and
+      the per-migration elite exchange — ``argmin_allgather`` for the scalar
       race, ``elite_broadcast`` for the winner's state, a masked select for
       the splice (``islands.migrate_on_mesh``).
     - control stays on the host: every process replays every island's host
       streams (unit picks, accept uniforms — cheap scalars), so the accept
       logic and histories are computed identically everywhere, and each
       process steps only the islands whose shard devices it owns.
+
+    Under ``shard_calib=True`` each island's step program closes over its
+    own calibration slice (``step_fns[i]``), so the migration race compares
+    per-slice objective estimates — the only cross-island objective traffic.
 
     Under a multi-process ``jax.distributed`` runtime the same loop runs
     unchanged: hosts step their local islands independently and meet only at
@@ -345,10 +601,6 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
     local = {i: d for i, d in enumerate(devs) if d.process_index == pid}
     multiproc = jax.process_count() > 1
 
-    step_fn = jax.jit(
-        lambda key, transforms, fq_stack, u:
-            step_body(key, transforms, fq_stack, u, env))
-
     # per-LOCAL-island state, committed to the island's shard device (the
     # cross-host stacked layout only materializes for migrations/fetch)
     t_loc = {i: jax.device_put(transforms0, d) for i, d in local.items()}
@@ -374,11 +626,12 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
     streams = [make_island_streams(scfg.seed, i) for i in range(n_islands)]
     rngs = [s[0] for s in streams]
     keys = [s[1] for s in streams]
-    cur = [loss0] * n_islands
-    best = [loss0] * n_islands
+    cur = list(loss0s)
+    best = list(loss0s)
     n_accept = [0] * n_islands
-    histories = [[(0, loss0, ce0, float(mse0), True)]
-                 for _ in range(n_islands)]
+    histories = [[(0, loss0s[i], p0s[i], a0s[i], True)]
+                 for i in range(n_islands)]
+    K = max(int(getattr(scfg, "population", 1)), 1)
 
     pid0 = jax.process_index() == 0
     run_span = obs.trace_span("search.run", mode="mapped",
@@ -400,15 +653,14 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
             u_dev = {}
             for i, d in local.items():   # dispatch all, then fetch (async)
                 u_dev[i] = jax.device_put(jnp.int32(us[i]), d)
-                outs[i] = step_fn(jax.device_put(subs[i], d), t_loc[i],
-                                  fq_loc[i], u_dev[i])
+                outs[i] = step_fns[i](jax.device_put(subs[i], d), t_loc[i],
+                                      fq_loc[i], u_dev[i])
             scal = np.zeros((n_islands, 3), np.float32)
             for i, out in outs.items():
                 scal[i] = [float(out[0]), float(out[1]), float(out[2])]
         # each host counts only its LOCAL islands, so the dist_snapshot sum
         # over hosts reconciles with the global stats["proposals"]
-        metrics["proposals"].inc(
-            len(outs) * max(int(getattr(scfg, "population", 1)), 1))
+        metrics["proposals"].inc(len(outs) * K, objective=obj_name)
         if multiproc:
             scal = np.asarray(exchange(put_shd(scal)))
         for i in range(n_islands):
@@ -488,12 +740,12 @@ def _run_mapped_islands(SearchResult, adapter, scfg, env, step_body, schedule,
     # monotonic clock (run_span.dur): wall time steps backwards under NTP
     stats["proposals_per_sec"] = stats["proposals"] / max(run_span.dur, 1e-9)
     return SearchResult(
-        params_q=adapter.install(env["params_base"], best_fq),
+        params_q=adapter.install(params_base, best_fq),
         transforms=best_t,
         history=histories[elite],
         accept_rate=n_accept[elite] / max(scfg.steps, 1),
         final_loss=best[elite],
-        initial_loss=loss0,
+        initial_loss=loss0s[elite],
         island_histories=histories,
         stats=stats,
     )

@@ -1,0 +1,79 @@
+"""O(unit)-memory candidate install: dynamic-slice tree surgery.
+
+A proposal touches ONE unit of the fake-quant stack, yet the v1 population
+step materialized K *full* stacks (``_tree_update`` per candidate, then a
+``vmap`` over the K-stacked trees) — memory = K × stack, the ROADMAP item-2
+blocker. The v2 path keeps ONE stack plus K per-unit candidate buffers:
+
+- :func:`tree_install_unit` writes one unit into the stacked tree via
+  ``jax.lax.dynamic_update_slice`` (the generalized ``_tree_update``; for a
+  concrete integer index the two lower identically, and the property tests
+  pin install-mode equivalence bit-for-bit);
+- :func:`eval_candidates_unit` folds a ``lax.map`` over the K unit buffers,
+  installing each into the (XLA-donated) stack one at a time — peak live
+  memory is stack + K × unit instead of (K+1) × stack;
+- :func:`eval_candidates_stack` is the v1 semantics behind the same
+  signature (``install="stack"``), kept for A/B benchmarking — the CI
+  bench-smoke lane asserts unit-install peak live bytes < stack-install
+  peak at K=8.
+
+Both entry points take the K×unit candidate batch (a REAL stage output in
+the engine's staged pipeline, so ``jax.live_arrays()`` sees exactly the
+memory model being claimed) and return ``(primary, aux)`` vectors of shape
+(K,).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tree_install_unit", "stack_unit_batch", "eval_candidates_unit",
+           "eval_candidates_stack", "tree_bytes"]
+
+
+def tree_install_unit(tree, u, unit):
+    """Install ``unit`` (per-unit leaves) at index ``u`` (traced ok) along
+    the leading axis of every leaf of the stacked ``tree``.
+
+    Explicit ``dynamic_update_slice`` rather than ``x.at[u].set(n)`` so the
+    O(unit) write is the lowered program by construction, not an indexing
+    idiom the compiler may or may not canonicalize the same way.
+    """
+    def one(x, n):
+        starts = (u,) + (jnp.int32(0),) * (x.ndim - 1)
+        return jax.lax.dynamic_update_slice(
+            x, n[None].astype(x.dtype), starts)
+
+    return jax.tree.map(one, tree, unit)
+
+
+def stack_unit_batch(units):
+    """[unit pytree] * K -> one pytree with a leading K axis (the candidate
+    buffer: K × unit, NOT K × stack)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+
+def eval_candidates_unit(unit_batch, fq_stack, u, eval_fn):
+    """Evaluate K candidates with O(unit) extra memory.
+
+    ``lax.map`` runs the body sequentially, so only ONE installed stack is
+    live at a time; the loop-carried state is nothing but the (K,) loss
+    rows. ``eval_fn(fq) -> (primary, aux)`` is the full objective forward.
+    """
+    def body(unit_fq):
+        return eval_fn(tree_install_unit(fq_stack, u, unit_fq))
+
+    return jax.lax.map(body, unit_batch)
+
+
+def eval_candidates_stack(unit_batch, fq_stack, u, eval_fn):
+    """v1 semantics: materialize all K installed stacks and ``vmap`` the
+    objective across them (memory = K × stack; fastest when it fits)."""
+    fq_batch = jax.vmap(
+        lambda unit_fq: tree_install_unit(fq_stack, u, unit_fq))(unit_batch)
+    return jax.vmap(eval_fn)(fq_batch)
+
+
+def tree_bytes(tree) -> int:
+    """Total payload bytes of a pytree of arrays (memory-model reporting)."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))

@@ -371,6 +371,71 @@ def test_uphill_accepts_counts_strict_uphill_as_int(tiny_opt):
     assert cold.stats["uphill_accepts"] == 0
 
 
+# ---------------------------------------------------------------------------
+# The one front door (ISSUE 10 satellite: repro.search.run)
+# ---------------------------------------------------------------------------
+
+def test_front_door_matches_legacy_bitwise(tiny_opt):
+    """``repro.search.run`` at the default config reproduces the legacy
+    trajectory bit-for-bit, and the deprecated ``run_search`` shim returns
+    the identical result under a DeprecationWarning."""
+    import repro.search as search
+    params, cfg, calib = tiny_opt
+    scfg = SearchConfig(steps=12, n_match_layers=2, log_every=0, seed=0)
+    h_legacy, t_legacy, best_legacy, n_acc = _legacy_run_search(
+        params, params, cfg, QCFG, calib, scfg)
+    res = search.run(params, params, cfg, QCFG, calib, scfg)
+    assert res.history == h_legacy
+    assert res.final_loss == best_legacy
+    assert np.array_equal(np.asarray(res.transforms.pi),
+                          np.asarray(t_legacy.pi))
+    assert res.stats["objective"] == "ce"
+    assert res.stats["install"] == "unit"
+    with pytest.warns(DeprecationWarning, match="run_search is deprecated"):
+        res_shim = run_search(params, params, cfg, QCFG, calib, scfg)
+    assert res_shim.history == res.history
+    assert res_shim.final_loss == res.final_loss
+
+
+def test_front_door_objective_kwarg_overrides_config(tiny_opt):
+    """``run(..., objective=...)`` wins over ``SearchConfig.objective`` and
+    is recorded in the result stats."""
+    import repro.search as search
+    params, cfg, calib = tiny_opt
+    scfg = SearchConfig(steps=3, n_match_layers=0, log_every=0,
+                        objective="ce")
+    res = search.run(params, params, cfg, QCFG, calib, scfg, objective="kl")
+    assert res.stats["objective"] == "kl"
+    assert all(np.isfinite(h[1]) for h in res.history)
+
+
+def test_front_door_auto_dispatches_hybrid():
+    """A hybrid block pattern routes through the two-phase composite with no
+    explicit runner choice (the legacy run_search_hybrid semantics)."""
+    import repro.search as search
+    cfg = get_config("zamba2-7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    calib = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                               cfg.vocab_size)
+    qcfg = QuantConfig(bits=2, group_size=16)
+    res = search.run(params, params, cfg, qcfg, calib,
+                     SearchConfig(steps=5, n_match_layers=0, log_every=0))
+    # two phases: (2 steps + step-0) + (3 steps + step-0)
+    assert len(res.history) == 5 + 2
+    assert res.stats["proposals"] == 5
+
+
+def test_run_population_search_shim_warns(tiny_opt):
+    params, cfg, calib = tiny_opt
+    from repro.core.search import make_adapter
+    from repro.search.engine import run_population_search
+    scfg = SearchConfig(steps=2, n_match_layers=0, log_every=0)
+    with pytest.warns(DeprecationWarning, match="run_population_search"):
+        res = run_population_search(params, params, cfg, QCFG, calib, scfg,
+                                    adapter=make_adapter(cfg))
+    assert res.final_loss <= res.initial_loss
+
+
 def test_hybrid_search_spends_odd_step_budgets_fully():
     """Regression (ISSUE 4): ``run_search_hybrid`` with ODD steps must run
     ``steps // 2`` + ``steps - steps // 2`` (not halve twice), and merge
